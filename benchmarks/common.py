@@ -1,0 +1,71 @@
+"""Shared benchmark utilities: timing, host calibration, CSV output."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["timeit", "csv_row", "calibrate_host"]
+
+
+def timeit(fn, *args, iters: int = 10, warmup: int = 3) -> float:
+    """Median wall seconds per call (blocking on the result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def calibrate_host(elem_bytes: int = 4):
+    """Measure the paper's four hardware parameters on THIS host, following
+    §6.2: a STREAM-like copy for w_private, a large ppermute ("ping-pong")
+    between host devices for w_remote, and a tiny ppermute for tau (the
+    per-message latency floor).  Host devices are one-core XLA threads, so
+    each device is modeled as its own "node" during validation — every
+    inter-device message pays tau, exactly like the paper's inter-node
+    accesses."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.perfmodel import HardwareParams
+
+    n = 1 << 22
+    x = jnp.arange(n, dtype=jnp.float32)
+    copy = jax.jit(lambda a: a * 1.0000001)
+    t_copy = timeit(copy, x, iters=10)
+    w_private = 2.0 * n * 4 / t_copy  # read + write
+
+    ndev = len(jax.devices())
+    if ndev > 1:
+        mesh = jax.make_mesh((ndev,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        perm = [(i, (i + 1) % ndev) for i in range(ndev)]
+
+        def ring(a):
+            return jax.shard_map(
+                lambda v: jax.lax.ppermute(v, "data", perm), mesh=mesh,
+                in_specs=P("data"), out_specs=P("data"))(a)
+
+        big = jax.device_put(
+            jnp.zeros((ndev * (1 << 20),), jnp.float32),
+            NamedSharding(mesh, P("data")))
+        t_big = timeit(jax.jit(ring), big, iters=5)
+        tiny = jax.device_put(jnp.zeros((ndev * 8,), jnp.float32),
+                              NamedSharding(mesh, P("data")))
+        tau = timeit(jax.jit(ring), tiny, iters=20)
+        w_remote = (1 << 20) * 4 / max(t_big - tau, 1e-9)
+    else:
+        w_remote = w_private
+        tau = timeit(copy, jnp.zeros((8,), jnp.float32), iters=30)
+
+    return HardwareParams(
+        w_private=w_private, w_remote=w_remote, tau=tau, cacheline=64,
+        elem=elem_bytes, idx=4)

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Multi-device benchmarks need 8
+host devices, so this module RE-EXECS itself with the XLA flag when invoked
+with a single device (keeping plain ``python -m benchmarks.run`` working).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table3 roofline
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def _ensure_devices():
+    if "--no-reexec" in sys.argv:
+        sys.argv.remove("--no-reexec")
+        return
+    if os.environ.get("XLA_FLAGS", "").find("device_count") < 0:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=8")
+        os.execvpe(sys.executable,
+                   [sys.executable, "-m", "benchmarks.run", "--no-reexec"]
+                   + sys.argv[1:], env)
+
+
+def main() -> None:
+    _ensure_devices()
+    from benchmarks import tables
+
+    which = [a for a in sys.argv[1:] if not a.startswith("-")]
+    all_benches = {
+        "table2": tables.table2_privatization,
+        "table3": tables.table3_strategies,
+        "table4": tables.table4_model_validation,
+        "fig2": tables.fig2_volumes,
+        "table5": tables.table5_heat2d,
+        "roofline": tables.roofline_report,
+    }
+    if not which:
+        which = list(all_benches)
+    print("name,us_per_call,derived")
+    for name in which:
+        all_benches[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving example: prefill a prompt batch, decode tokens with the
+ring-cache / SSM-state machinery (assignment deliverable b, serving flavor).
+
+Run: python examples/serve_lm.py [--arch hymba-1.5b] [--gen 32]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--batch", "4", "--prompt-len", "32", "--gen", "16",
+                "--reduced"]
+    if not any(a.startswith("--arch") or a == "--preset" for a in args):
+        defaults = ["--arch", "llama3-8b"] + defaults
+    serve_main(defaults + args)

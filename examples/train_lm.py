@@ -1,0 +1,24 @@
+"""End-to-end driver: train the ~100M-param dense LM on synthetic data with
+checkpointing and straggler watch (assignment deliverable b).
+
+Run (a few hundred steps, CPU):
+  python examples/train_lm.py --steps 300
+
+This is a thin veneer over the production driver (repro.launch.train): the
+example IS the deployable path.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main  # noqa: E402
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--preset", "lm100m", "--batch", "8", "--seq", "256",
+                "--ckpt-dir", "/tmp/repro_lm100m_ckpt",
+                "--metrics-out", "/tmp/repro_lm100m_metrics.json"]
+    if "--steps" not in " ".join(args):
+        defaults += ["--steps", "300"]
+    train_main(defaults + args)

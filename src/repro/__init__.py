@@ -1,0 +1,8 @@
+"""repro — fine-grained irregular communication, optimized and modeled.
+
+JAX/TPU reproduction of Lagraviere et al., "Performance optimization and
+modeling of fine-grained irregular communication in UPC" (2019), scaled to
+a multi-pod training/serving framework.  See README.md and DESIGN.md.
+"""
+
+__version__ = "1.0.0"

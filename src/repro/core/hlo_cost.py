@@ -1,0 +1,341 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` visits a while-loop body ONCE,
+so any scanned program (scan-over-layers, flash-attention chunk scans, fused
+losses — i.e. everything in this framework) is undercounted by the trip
+count.  This module walks the HLO call graph instead:
+
+    cost(entry) = Σ own instructions
+                + Σ cost(called computation) × multiplier
+      multiplier = known_trip_count for ``while`` (from backend_config),
+                   1 for fusions / calls / branches.
+
+Counted quantities per computation:
+  * FLOPs: ``dot`` (2 × numel(result) × contracted-dims) and ``convolution``
+    (2 × numel(result) × kernel reduction size); elementwise ops are ignored
+    (dots dominate transformer arithmetic by orders of magnitude).
+  * HBM bytes: Σ output bytes of materialized top-level instructions
+    (post-fusion roots) + operand bytes for dot/convolution (matmuls stream
+    their operands from HBM).  Control flow (while/conditional/call own
+    tuples), GTEs, bitcasts, parameters and constants are free — their
+    interiors/consumers are charged directly.  A post-fusion
+    materialization-traffic model: what a TPU actually writes to and reads
+    from HBM, assuming XLA's fusion decisions carry over.
+  * Collective bytes: per-op, ring-model bytes (see core.roofline), with
+    while-body collectives correctly multiplied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"body=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+}
+
+
+def _shape_numel_bytes(typestr: str):
+    total_b = 0
+    total_n = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total_n += numel
+        total_b += numel * _DTYPE_BYTES[dt]
+    return total_n, total_b
+
+
+def _shape_dims(typestr: str):
+    m = _SHAPE_RE.search(typestr)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: list  # (name, typestr, op, rest)
+    shapes: dict  # instr name -> typestr
+
+
+def _parse_instr(line: str):
+    """'%name = TYPE op(rest' with TYPE possibly a nested tuple."""
+    m = _INSTR_HEAD_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":       # tuple type: scan balanced parens
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        typestr = line[i:j + 1]
+        i = j + 1
+    else:                               # scalar/array type: up to whitespace
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        typestr = line[i:j]
+        i = j
+    rest = line[i:].lstrip()
+    mo = re.match(r"([\w\-]+)\(", rest)
+    if not mo:
+        return None
+    return name, typestr, mo.group(1), rest[mo.end():]
+
+
+def _parse_computations(text: str) -> tuple[dict, str]:
+    comps: dict[str, _Comp] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _COMP_START_RE.match(s)
+            if m and s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+                cur = _Comp(m.group(1), [], {})
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_instr(line)
+        if parsed:
+            name, typestr, op, rest = parsed
+            cur.instrs.append((name, typestr, op, rest))
+            cur.shapes[name] = typestr
+    return comps, entry
+
+
+def _collective_bytes(op: str, typestr: str, rest: str, num_devices: int,
+                      devices_per_pod: int, bf16_program: bool = False):
+    from repro.core.roofline import _parse_groups  # reuse group parser
+    _, out_bytes = _shape_numel_bytes(typestr)
+    if out_bytes == 0:
+        return 0.0, 0.0, None
+    # XLA:CPU float-normalization legalizes bf16 arithmetic to f32, so
+    # collectives fused with dots carry f32 payloads on the dry-run host.
+    # On TPU the same program communicates bf16.  When the model is
+    # authored bf16 (bf16_program), charge large f32 payloads at 2 B/elem;
+    # small f32 collectives (softmax/norm stats, which are genuinely f32)
+    # are left uncorrected.
+    if bf16_program and "f32[" in typestr and out_bytes >= (1 << 20):
+        out_bytes //= 2
+    groups = _parse_groups(rest, num_devices)
+    if groups:
+        g = max(len(grp) for grp in groups)
+        crosses = any(
+            (np.asarray(grp) // devices_per_pod).min()
+            != (np.asarray(grp) // devices_per_pod).max()
+            for grp in groups)
+    else:
+        g = num_devices
+        crosses = devices_per_pod < num_devices
+    g = max(g, 2)
+    kind = op.replace("-start", "")
+    if kind == "all-gather":
+        moved = out_bytes * (g - 1) / g
+    elif kind == "reduce-scatter":
+        moved = out_bytes * (g - 1)
+    elif kind == "all-reduce":
+        moved = 2.0 * out_bytes * (g - 1) / g
+    elif kind == "all-to-all":
+        moved = out_bytes * (g - 1) / g
+    elif kind == "collective-permute":
+        moved = float(out_bytes)
+    else:
+        return 0.0, 0.0, None
+    return (0.0, moved, kind) if crosses else (moved, 0.0, kind)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_ici_bytes: float = 0.0
+    coll_dci_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    coll_count: float = 0.0
+
+    def __add__(self, o):
+        kinds = dict(self.coll_by_kind)
+        for k, v in o.coll_by_kind.items():
+            kinds[k] = kinds.get(k, 0.0) + v
+        return HloCost(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes,
+                       self.coll_ici_bytes + o.coll_ici_bytes,
+                       self.coll_dci_bytes + o.coll_dci_bytes, kinds,
+                       self.coll_count + o.coll_count)
+
+    def __mul__(self, k: float):
+        return HloCost(self.flops * k, self.hbm_bytes * k,
+                       self.coll_ici_bytes * k, self.coll_dci_bytes * k,
+                       {kk: v * k for kk, v in self.coll_by_kind.items()},
+                       self.coll_count * k)
+
+
+_COLLECTIVE_OPS = {
+    "all-gather", "all-gather-start", "all-reduce", "all-reduce-start",
+    "reduce-scatter", "all-to-all", "collective-permute",
+    "collective-permute-start",
+}
+
+
+def analyze_hlo(text: str, *, num_devices: int = 1,
+                devices_per_pod: int | None = None,
+                bf16_program: bool = False) -> HloCost:
+    devices_per_pod = devices_per_pod or num_devices
+    comps, entry = _parse_computations(text)
+    memo: dict[str, HloCost] = {}
+
+    def operand_bytes(comp, rest):
+        """Bytes of materialized same-computation operands (first paren
+        group of ``rest`` holds the operand list)."""
+        depth, j = 1, 0
+        while j < len(rest) and depth:
+            if rest[j] == "(":
+                depth += 1
+            elif rest[j] == ")":
+                depth -= 1
+            j += 1
+        total = 0
+        for name in _OPERAND_RE.findall(rest[:j]):
+            ts = comp.shapes.get(name)
+            if ts is not None:
+                _, b = _shape_numel_bytes(ts)
+                total += b
+        return total
+
+    def cost_of(cname: str) -> HloCost:
+        if cname in memo:
+            return memo[cname]
+        comp = comps.get(cname)
+        if comp is None:
+            return HloCost()
+        memo[cname] = HloCost()  # cycle guard
+        total = HloCost()
+        for (iname, typestr, op, rest) in comp.instrs:
+            own = HloCost()
+            if op in ("dot", "dot-general"):
+                n_out, _ = _shape_numel_bytes(typestr)
+                k = 1
+                mc = _CONTRACT_RE.search(rest)
+                ops = _OPERAND_RE.findall(rest)
+                if mc and ops:
+                    lhs_shape = comp.shapes.get(ops[0])
+                    if lhs_shape:
+                        dims = _shape_dims(lhs_shape)
+                        for ci in (mc.group(1).split(",")
+                                   if mc.group(1) else []):
+                            ci = int(ci)
+                            if ci < len(dims):
+                                k *= dims[ci]
+                own.flops = 2.0 * n_out * k
+                _, ob = _shape_numel_bytes(typestr)
+                own.hbm_bytes = float(ob + operand_bytes(comp, rest))
+            elif op == "convolution":
+                n_out, ob = _shape_numel_bytes(typestr)
+                # reduction size: input feature * kernel spatial (approx from
+                # rhs operand numel / output features)
+                ops = _OPERAND_RE.findall(rest)
+                red = 1
+                if len(ops) >= 2 and ops[1] in comp.shapes:
+                    rn, _ = _shape_numel_bytes(comp.shapes[ops[1]])
+                    dims = _shape_dims(typestr)
+                    feat = dims[-1] if dims else 1
+                    red = max(1, rn // max(feat, 1))
+                own.flops = 2.0 * n_out * red
+                own.hbm_bytes = float(ob + operand_bytes(comp, rest))
+            elif op in _COLLECTIVE_OPS:
+                ici, dci, kind = _collective_bytes(
+                    op, typestr, rest, num_devices, devices_per_pod,
+                    bf16_program=bf16_program)
+                if kind:
+                    own.coll_ici_bytes = ici
+                    own.coll_dci_bytes = dci
+                    own.coll_by_kind = {kind: ici + dci}
+                    own.coll_count = 1.0
+                _, ob = _shape_numel_bytes(typestr)
+                own.hbm_bytes = float(ob)
+            elif op in _FREE_OPS or op in ("while", "conditional", "call",
+                                           "optimization-barrier"):
+                pass  # control flow: interiors are charged directly
+            else:
+                _, ob = _shape_numel_bytes(typestr)
+                own.hbm_bytes = float(ob)
+
+            total = total + own
+
+            # sub-computations
+            if op == "while":
+                mb = _WHILE_RE.search(rest)
+                trip = 1
+                mt = _TRIP_RE.search(rest)
+                if mt:
+                    trip = int(mt.group(1))
+                if mb:
+                    total = total + cost_of(mb.group(1)) * trip
+            elif op == "conditional":
+                mbr = _BRANCH_RE.search(rest)
+                if mbr:
+                    branches = _OPERAND_RE.findall(mbr.group(1))
+                    if branches:
+                        sub = [cost_of(b) for b in branches]
+                        # charge the max-cost branch
+                        total = total + max(
+                            sub, key=lambda c: (c.flops, c.hbm_bytes))
+            else:
+                mc2 = _CALLS_RE.search(rest)
+                if mc2:
+                    callee = mc2.group(1)
+                    sub = cost_of(callee)
+                    if op == "fusion":
+                        # fused interiors are not materialized: keep flops
+                        # (a dot may hide inside), drop interior bytes
+                        sub = HloCost(sub.flops, 0.0, sub.coll_ici_bytes,
+                                      sub.coll_dci_bytes, sub.coll_by_kind,
+                                      sub.coll_count)
+                    total = total + sub
+
+        memo[cname] = total
+        return total
+
+    return cost_of(entry) if entry else HloCost()

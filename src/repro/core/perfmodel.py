@@ -1,0 +1,278 @@
+"""The paper's performance models (§5, §8) — eqs. (5)–(22), verbatim.
+
+Philosophy (paper §5.4 / §9): represent the machine by only FOUR parameters
+  * ``w_private``  — per-thread contiguous private-memory bandwidth [B/s]
+  * ``w_remote``   — per-node interconnect bandwidth [B/s]
+  * ``tau``        — latency of one individual remote access [s]
+  * ``cacheline``  — granularity of a non-contiguous local access [B]
+and predict run time from *exactly counted* communication volumes and
+frequencies, per thread and per node (never aggregate averages).
+
+The counts come from ``CommPlan.counts`` (one-time preparation step).  The
+models are platform-independent: instantiate ``HardwareParams`` with the
+paper's Abel cluster numbers to reproduce Table 4, with measured host numbers
+to validate our own runs, or with TPU v5e numbers to predict pod-scale
+behavior (the same constants the §Roofline analysis uses).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.plan import GatherCounts, Topology
+
+__all__ = [
+    "HardwareParams", "ABEL", "TPU_V5E", "SpmvWorkload",
+    "predict_v1", "predict_v2", "predict_v3", "predict_replicate",
+    "predict_heat2d", "Heat2DWorkload",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareParams:
+    """The paper's four hardware characteristic parameters (§5.4)."""
+
+    w_private: float   # B/s per thread/device (contiguous local)
+    w_remote: float    # B/s per node (contiguous inter-node)
+    tau: float         # s, individual remote access latency
+    cacheline: int     # B, non-contiguous local access granularity
+    elem: int = 8      # sizeof(one vector element); paper: double
+    idx: int = 4       # sizeof(one column index);  paper: int
+
+    def replace(self, **kw) -> "HardwareParams":
+        return dataclasses.replace(self, **kw)
+
+
+# Paper §6.2: Abel cluster, 16 UPC threads/node.
+ABEL = HardwareParams(
+    w_private=75e9 / 16, w_remote=6e9, tau=3.4e-6, cacheline=64,
+)
+
+# TPU v5e adaptation (DESIGN.md §2): device=chip, node=pod.
+#   w_private -> HBM bw per chip; w_remote -> ICI egress per chip (~4 links);
+#   tau -> per-collective hop latency; cacheline -> (8,128) f32 VREG tile row.
+TPU_V5E = HardwareParams(
+    w_private=819e9, w_remote=4 * 50e9, tau=1e-6, cacheline=512,
+    elem=4, idx=4,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvWorkload:
+    """Static facts about one SpMV instance on one partitioning."""
+
+    n: int
+    r_nz: int
+    p: int                 # number of threads/devices
+    blocksize: int         # paper BLOCKSIZE (virtual block size)
+    topology: Topology
+    counts: GatherCounts
+
+    @property
+    def shard_size(self) -> int:
+        return self.n // self.p
+
+
+# --------------------------------------------------------------------------
+# §5.1 computation time
+# --------------------------------------------------------------------------
+
+def _d_min_comp(hw: HardwareParams, r_nz: int) -> float:
+    """Eq. (6): minimum main-memory traffic per y(i), assuming perfect reuse
+    of x in the last-level cache."""
+    return r_nz * (hw.elem + hw.idx) + 3 * hw.elem
+
+
+def t_comp_per_thread(w: SpmvWorkload, hw: HardwareParams) -> np.ndarray:
+    """Eq. (5)+(7): per-thread compute time, length-P array.
+
+    Our partitioning is one contiguous shard per device (DESIGN.md §2 note 4),
+    i.e. B_thread_comp * BLOCKSIZE == shard_size for every thread.
+    """
+    elems = np.full(w.p, w.shard_size, dtype=np.float64)
+    return elems * _d_min_comp(hw, w.r_nz) / hw.w_private
+
+
+# --------------------------------------------------------------------------
+# §5.2.3 UPCv1 — fine-grained individual accesses, eq. (10) + eq. (16)
+# --------------------------------------------------------------------------
+
+def predict_v1(w: SpmvWorkload, hw: HardwareParams) -> float:
+    c = w.counts
+    t_comm = (
+        c.c_local_indv * (hw.cacheline / hw.w_private)
+        + c.c_remote_indv * hw.tau
+    )
+    return float(np.max(t_comp_per_thread(w, hw) + t_comm))
+
+
+# --------------------------------------------------------------------------
+# §5.2.4 UPCv2 — block-wise transfers, eq. (11) + eq. (17)
+# --------------------------------------------------------------------------
+
+def predict_v2(w: SpmvWorkload, hw: HardwareParams) -> float:
+    c = w.counts
+    bs_bytes = w.blocksize * hw.elem
+    t_comp = t_comp_per_thread(w, hw)
+    total = -np.inf
+    for node in range(w.topology.num_nodes):
+        th = _threads_of_node(w.topology, node)
+        t_local = np.max(c.b_local[th] * 2.0 * bs_bytes / hw.w_private)
+        t_remote = np.sum(c.b_remote[th] * (hw.tau + bs_bytes / hw.w_remote))
+        total = max(total, np.max(t_comp[th]) + t_local + t_remote)
+    return float(total)
+
+
+# --------------------------------------------------------------------------
+# §5.2.5 UPCv3 — condensed + consolidated messages, eqs. (12)–(15) + (18)
+# --------------------------------------------------------------------------
+
+def v3_components(
+    w: SpmvWorkload, hw: HardwareParams
+) -> dict[str, np.ndarray]:
+    """Per-thread pack/copy/unpack (and per-thread memput inputs), eqs. 12–15."""
+    c = w.counts
+    s_out = c.s_local_out + c.s_remote_out
+    s_in = c.s_local_in + c.s_remote_in
+    t_pack = s_out * (2 * hw.elem + hw.idx) / hw.w_private           # (12)
+    t_copy = np.full(
+        w.p, 2.0 * w.shard_size * hw.elem / hw.w_private            # (14)
+    )
+    t_unpack = s_in * (hw.elem + hw.idx + hw.cacheline) / hw.w_private  # (15)
+    return {"pack": t_pack, "copy": t_copy, "unpack": t_unpack}
+
+
+def predict_v3(w: SpmvWorkload, hw: HardwareParams) -> float:
+    c = w.counts
+    comp = t_comp_per_thread(w, hw)
+    parts = v3_components(w, hw)
+
+    # eq. (13): per-node memput term
+    comm = -np.inf
+    for node in range(w.topology.num_nodes):
+        th = _threads_of_node(w.topology, node)
+        t_local = np.max(2.0 * c.s_local_out[th] * hw.elem / hw.w_private)
+        t_remote = np.sum(
+            c.c_remote_out[th] * hw.tau
+            + c.s_remote_out[th] * hw.elem / hw.w_remote
+        )
+        comm = max(comm, np.max(parts["pack"][th]) + t_local + t_remote)
+
+    # eq. (18): barrier between memput and unpack -> max-compose the stages
+    tail = np.max(parts["copy"] + parts["unpack"] + comp)
+    return float(comm + tail)
+
+
+# --------------------------------------------------------------------------
+# Naive replicate baseline (beyond paper: the TPU "access anything" analogue).
+# Whole vector all-gathered: every device receives n - shard_size elements,
+# inter-node portion bounded by node egress.
+# --------------------------------------------------------------------------
+
+def predict_replicate(w: SpmvWorkload, hw: HardwareParams) -> float:
+    topo = w.topology
+    per_node_shards = topo.shards_per_node
+    local_vol = (per_node_shards - 1) * w.shard_size * hw.elem
+    remote_vol = (w.n - per_node_shards * w.shard_size) * hw.elem
+    t_comm = (
+        2.0 * local_vol / hw.w_private
+        + (hw.tau * max(0, topo.num_nodes - 1) + remote_vol / hw.w_remote)
+    )
+    return float(np.max(t_comp_per_thread(w, hw)) + t_comm)
+
+
+def predict_all(w: SpmvWorkload, hw: HardwareParams) -> dict[str, float]:
+    return {
+        "v1_finegrained": predict_v1(w, hw),
+        "v2_blockwise": predict_v2(w, hw),
+        "v3_condensed": predict_v3(w, hw),
+        "replicate": predict_replicate(w, hw),
+    }
+
+
+def _threads_of_node(topo: Topology, node: int) -> np.ndarray:
+    lo = node * topo.shards_per_node
+    return np.arange(lo, lo + topo.shards_per_node)
+
+
+# --------------------------------------------------------------------------
+# §8 — 2D heat equation on a uniform mesh, eqs. (19)–(22)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Heat2DWorkload:
+    """Global M×N mesh on an mprocs×nprocs process grid (paper §8.1)."""
+
+    big_m: int
+    big_n: int
+    mprocs: int
+    nprocs: int
+    topology: Topology  # over mprocs*nprocs threads, row-major rank order
+
+    @property
+    def m(self) -> int:  # local rows incl. halo
+        return self.big_m // self.mprocs + 2
+
+    @property
+    def n(self) -> int:  # local cols incl. halo
+        return self.big_n // self.nprocs + 2
+
+
+def _heat2d_volumes(w: Heat2DWorkload):
+    """Per-thread halo volumes (elements), split horizontal / all, local /
+    remote, plus remote message counts — exact counting, per thread."""
+    p = w.mprocs * w.nprocs
+    node = w.topology.node_of(np.arange(p))
+    s_horiz = np.zeros(p)
+    s_local = np.zeros(p)
+    s_remote = np.zeros(p)
+    c_remote = np.zeros(p)
+    inner_m, inner_n = w.m - 2, w.n - 2
+    for ip in range(w.mprocs):
+        for kp in range(w.nprocs):
+            r = ip * w.nprocs + kp
+            nbrs = []
+            if kp > 0:
+                nbrs.append((ip * w.nprocs + kp - 1, inner_m, True))
+            if kp < w.nprocs - 1:
+                nbrs.append((ip * w.nprocs + kp + 1, inner_m, True))
+            if ip > 0:
+                nbrs.append(((ip - 1) * w.nprocs + kp, inner_n, False))
+            if ip < w.mprocs - 1:
+                nbrs.append(((ip + 1) * w.nprocs + kp, inner_n, False))
+            for (nr, vol, horiz) in nbrs:
+                if horiz:
+                    s_horiz[r] += vol
+                if node[nr] == node[r]:
+                    s_local[r] += vol
+                else:
+                    s_remote[r] += vol
+                    c_remote[r] += 1
+    return s_horiz, s_local, s_remote, c_remote
+
+
+def predict_heat2d(
+    w: Heat2DWorkload, hw: HardwareParams, steps: int = 1
+) -> dict[str, float]:
+    """Returns {"halo": T_2D_halo, "comp": T_2D_comp} for ``steps`` steps."""
+    s_horiz, s_local, s_remote, c_remote = _heat2d_volumes(w)
+
+    # eq. (19): pack == unpack (horizontal only; vertical is contiguous)
+    t_pack = s_horiz * (hw.elem + hw.cacheline) / hw.w_private
+
+    # eq. (20): per-node memget
+    halo = -np.inf
+    for nd in range(w.topology.num_nodes):
+        th = _threads_of_node(w.topology, nd)
+        t_loc = np.max(2.0 * s_local[th] * hw.elem / hw.w_private)
+        t_rem = np.sum(
+            c_remote[th] * hw.tau + s_remote[th] * hw.elem / hw.w_remote
+        )
+        halo = max(
+            halo, np.max(t_pack[th]) + t_loc + t_rem + np.max(t_pack[th])
+        )  # eq. (21): pack + memget + unpack, max-composed per node
+
+    # eq. (22): 3 * (m-2) * (n-2) * elem / w_private
+    comp = 3.0 * (w.m - 2) * (w.n - 2) * hw.elem / hw.w_private
+    return {"halo": steps * float(halo), "comp": steps * float(comp)}

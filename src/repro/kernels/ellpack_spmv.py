@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for modified-EllPack SpMV — the paper's compute hot-spot.
+
+TPU adaptation of the paper's insight (DESIGN.md §2): the GPU/CPU version of
+this kernel gathers ``x[J[i,j]]`` straight from main memory.  On TPU we apply
+the paper's *blockwise* idea one level down the memory hierarchy — at the
+HBM→VMEM boundary:
+
+  * rows are processed in blocks of ``rows_per_block``;
+  * for each row block, the one-time plan computes the (quantized) column
+    *window* that covers every index the block touches (meshes reordered for
+    locality make this window small — paper §3.1/§6.1);
+  * the window is DMA'd into VMEM as two adjacent BlockSpec tiles selected by
+    a scalar-prefetched per-block window index (``win_blk``), so the irregular
+    gather happens VMEM-locally on relative indices.
+
+This is exactly "message condensing at VMEM granularity": bulk, planned,
+latency-amortizing transfers instead of fine-grained irregular access.
+
+Grid: ``(n_row_blocks,)``.  VMEM per step: window 2·W·4B + row tiles.
+The in-VMEM gather (``jnp.take``) lowers to Mosaic dynamic-gather; validated
+with ``interpret=True`` on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ellpack_spmv_windowed"]
+
+
+def _kernel_simple(win_blk_ref, diag_ref, vals_ref, cols_ref, own_rel_ref,
+                   x_lo_ref, x_hi_ref, y_ref):
+    """Row-block kernel; ``own_rel`` carries the row's own x index relative to
+    the window (so the diagonal term is also a window gather)."""
+    xw = jnp.concatenate([x_lo_ref[...], x_hi_ref[...]])   # (2W,)
+    gathered = jnp.take(xw, cols_ref[...], axis=0)         # (R, r_nz)
+    own = jnp.take(xw, own_rel_ref[...], axis=0)           # (R,)
+    acc = (vals_ref[...].astype(jnp.float32)
+           * gathered.astype(jnp.float32)).sum(axis=1)
+    y = diag_ref[...].astype(jnp.float32) * own.astype(jnp.float32) + acc
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def ellpack_spmv_windowed(
+    diag: jax.Array,       # (n,)
+    vals: jax.Array,       # (n, r_nz)
+    cols_rel: jax.Array,   # (n, r_nz) int32, relative to win_blk*window
+    own_rel: jax.Array,    # (n,)      int32, row's own x idx relative to window
+    win_blk: jax.Array,    # (n_blocks,) int32 scalar-prefetch window indices
+    x: jax.Array,          # (>= (max(win_blk)+2)*window,) padded vector
+    *,
+    window: int,
+    rows_per_block: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """y of shape (n,).  All blocking/padding is prepared by kernels.ops."""
+    n, r_nz = vals.shape
+    assert n % rows_per_block == 0
+    n_blocks = n // rows_per_block
+    assert x.shape[0] % window == 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((rows_per_block,), lambda i, w: (i,)),
+            pl.BlockSpec((rows_per_block, r_nz), lambda i, w: (i, 0)),
+            pl.BlockSpec((rows_per_block, r_nz), lambda i, w: (i, 0)),
+            pl.BlockSpec((rows_per_block,), lambda i, w: (i,)),
+            pl.BlockSpec((window,), lambda i, w: (w[i],)),
+            pl.BlockSpec((window,), lambda i, w: (w[i] + 1,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block,), lambda i, w: (i,)),
+    )
+    return pl.pallas_call(
+        _kernel_simple,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), diag.dtype),
+        interpret=interpret,
+    )(win_blk, diag, vals, cols_rel, own_rel, x, x)

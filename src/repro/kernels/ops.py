@@ -1,0 +1,231 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper owns the blocking/padding/window planning its kernel needs and
+falls back to the jnp reference where the kernel's preconditions cannot be
+met (e.g. shard too large for whole-VMEM residence).  ``interpret`` defaults
+to True off-TPU so the whole framework runs (and is tested) on CPU; on TPU
+backends the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+from repro.kernels.ellpack_spmv import ellpack_spmv_windowed
+from repro.kernels.pack_gather import pack_gather as _pack_gather_kernel
+from repro.kernels.stencil2d import stencil2d as _stencil2d_kernel
+
+__all__ = [
+    "on_tpu", "plan_spmv_windows", "ellpack_spmv", "make_spmv_on_copy_sharded",
+    "pack_gather", "stencil2d", "decode_attention",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_default(interpret):
+    return (not on_tpu()) if interpret is None else interpret
+
+
+# --------------------------------------------------------------------------
+# EllPack SpMV
+# --------------------------------------------------------------------------
+
+def plan_spmv_windows(
+    cols: np.ndarray, *, rows_per_block: int = 256, lane: int = 128
+):
+    """Host-side one-time window planning (DESIGN.md: VMEM-level blockwise).
+
+    Returns (window, win_blk, cols_rel, own_rel); ``window`` is the static
+    tile width (multiple of ``lane``) covering every row block's column span.
+    """
+    n, _ = cols.shape
+    assert n % rows_per_block == 0, "pad rows first"
+    nblk = n // rows_per_block
+    own = np.arange(n, dtype=np.int64)
+    # own row index participates in the span (diagonal term gathers x[i])
+    lo = np.minimum(
+        cols.reshape(nblk, -1).min(axis=1),
+        own.reshape(nblk, rows_per_block).min(axis=1),
+    )
+    hi = np.maximum(
+        cols.reshape(nblk, -1).max(axis=1),
+        own.reshape(nblk, rows_per_block).max(axis=1),
+    )
+    span = int((hi - lo + 1).max())
+    window = max(lane, int(np.ceil(span / lane)) * lane)
+    win_blk = (lo // window).astype(np.int32)           # (nblk,)
+    base = (win_blk.astype(np.int64) * window)          # window start
+    cols_rel = (
+        cols - np.repeat(base, rows_per_block)[:, None]
+    ).astype(np.int32)
+    own_rel = (own - np.repeat(base, rows_per_block)).astype(np.int32)
+    assert cols_rel.min() >= 0 and cols_rel.max() < 2 * window
+    return window, win_blk, cols_rel, own_rel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "rows_per_block", "interpret")
+)
+def _spmv_call(diag, vals, cols_rel, own_rel, win_blk, x_padded, *, window,
+               rows_per_block, interpret):
+    return ellpack_spmv_windowed(
+        diag, vals, cols_rel, own_rel, win_blk, x_padded,
+        window=window, rows_per_block=rows_per_block, interpret=interpret,
+    )
+
+
+def ellpack_spmv(
+    diag, vals, cols, x, *, rows_per_block: int = 256, interpret=None,
+    plan=None,
+):
+    """y = diag*x + EllPack(vals, cols) @ x via the windowed Pallas kernel.
+
+    ``plan``: optional precomputed ``plan_spmv_windows`` output (amortize the
+    one-time prep, exactly like the paper's preparation step).
+    """
+    interpret = _interpret_default(interpret)
+    n, _ = np.shape(vals)
+    if plan is None:
+        plan = plan_spmv_windows(np.asarray(cols), rows_per_block=rows_per_block)
+    window, win_blk, cols_rel, own_rel = plan
+    need = (int(win_blk.max()) + 2) * window
+    x_padded = jnp.pad(x, (0, max(0, need - x.shape[0])))
+    return _spmv_call(
+        diag, vals, jnp.asarray(cols_rel), jnp.asarray(own_rel),
+        jnp.asarray(win_blk), x_padded,
+        window=window, rows_per_block=rows_per_block, interpret=interpret,
+    )
+
+
+def make_spmv_on_copy_sharded(
+    cols: np.ndarray, p: int, *, rows_per_block: int = 256, interpret=None
+):
+    """Per-shard window plans with one common static window, for use inside
+    the DistributedSpMV shard_map (each device computes its own rows against
+    its private x_copy).
+
+    Returns (local_fn, plan_args) where ``plan_args`` are host arrays shaped
+    (P, ...) to be passed through shard_map with in_specs P(axis) and
+    ``local_fn(diag_l, vals_l, x_copy, win_blk_l, cols_rel_l, own_rel_l)``.
+    """
+    interpret = _interpret_default(interpret)
+    n, r_nz = cols.shape
+    shard = n // p
+    rows_per_block = min(rows_per_block, shard)
+    # plan per shard, then unify the static window across shards
+    plans = [
+        plan_spmv_windows(cols[q * shard:(q + 1) * shard],
+                          rows_per_block=rows_per_block)
+        for q in range(p)
+    ]
+    window = max(pl[0] for pl in plans)
+    nblk = shard // rows_per_block
+    win_blk = np.zeros((p, nblk), np.int32)
+    cols_rel = np.zeros((p, shard, r_nz), np.int32)
+    own_rel = np.zeros((p, shard), np.int32)
+    for q in range(p):
+        sub = cols[q * shard:(q + 1) * shard]
+        own = np.arange(q * shard, (q + 1) * shard, dtype=np.int64)
+        lo = np.minimum(
+            sub.reshape(nblk, -1).min(axis=1),
+            own.reshape(nblk, rows_per_block).min(axis=1),
+        )
+        wb = (lo // window).astype(np.int32)
+        base = np.repeat(wb.astype(np.int64) * window, rows_per_block)
+        win_blk[q] = wb
+        cols_rel[q] = (sub - base[:, None]).astype(np.int32)
+        own_rel[q] = (own - base).astype(np.int32)
+        assert cols_rel[q].min() >= 0 and cols_rel[q].max() < 2 * window
+    need_global = (int(win_blk.max()) + 2) * window
+
+    def local_fn(diag_l, vals_l, x_copy, win_blk_l, cols_rel_l, own_rel_l):
+        ln = x_copy.shape[0]
+        if ln < need_global:
+            xp = jnp.pad(x_copy, (0, need_global - ln))
+        else:
+            xp = x_copy[:need_global]
+        return _spmv_call(
+            diag_l, vals_l, cols_rel_l[0], own_rel_l[0], win_blk_l[0], xp,
+            window=window, rows_per_block=rows_per_block, interpret=interpret,
+        )
+
+    return local_fn, (win_blk, cols_rel, own_rel)
+
+
+# --------------------------------------------------------------------------
+# Message packing
+# --------------------------------------------------------------------------
+
+_VMEM_SHARD_LIMIT = 8 * 1024 * 1024  # bytes; half of v5e VMEM
+
+def pack_gather(x, idx, *, block: int = 1024, interpret=None):
+    """out[k] = x[idx[k]] with the shard VMEM-resident; ref fallback if the
+    shard exceeds the VMEM budget."""
+    interpret = _interpret_default(interpret)
+    if x.size * x.dtype.itemsize > _VMEM_SHARD_LIMIT:
+        return kref.pack_gather_ref(x, idx)
+    m = idx.shape[0]
+    block = min(block, m) if m else 1
+    if m == 0:
+        return jnp.zeros((0,), x.dtype)
+    padded = int(np.ceil(m / block)) * block
+    idx_p = jnp.pad(idx, (0, padded - m))
+    out = _pack_gather_kernel(x, idx_p, block=block, interpret=interpret)
+    return out[:m]
+
+
+# --------------------------------------------------------------------------
+# 2D stencil
+# --------------------------------------------------------------------------
+
+def stencil2d(x, *, coef: float, tile_rows: int = 8, interpret=None):
+    """One Jacobi step; pads rows to a tile multiple and slices back."""
+    interpret = _interpret_default(interpret)
+    m, n = x.shape
+    mp = int(np.ceil(m / tile_rows)) * tile_rows
+    if mp != m:
+        x_p = jnp.pad(x, ((0, mp - m), (0, 0)), mode="edge")
+    else:
+        x_p = x
+    # padded rows replicate the last row; masking keys on the *unpadded*
+    # boundary, so run the kernel with total_rows = m semantics by slicing.
+    out = _stencil2d_kernel(x_p, coef=coef, tile_rows=tile_rows,
+                            interpret=interpret)
+    if mp != m:
+        # rows >= m are padding; recompute the last true row as boundary copy
+        out = out[:m, :]
+        out = out.at[m - 1, :].set(x[m - 1, :])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decode attention (flash-decoding)
+# --------------------------------------------------------------------------
+
+def decode_attention(q, k, v, lengths, *, kv_chunk: int = 512,
+                     interpret=None):
+    """Single-token GQA attention over a KV cache; see
+    kernels/decode_attention.py."""
+    from repro.kernels.decode_attention import decode_attention as _da
+    interpret = _interpret_default(interpret)
+    return _da(q, k, v, lengths, kv_chunk=kv_chunk, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# Fused selective scan (mamba-1 recurrence)
+# --------------------------------------------------------------------------
+
+def selective_scan(x, dt, bmat, cmat, a, *, tile_di: int = 128,
+                   chunk_l: int = 256, interpret=None):
+    """HBM-minimal SSM recurrence; see kernels/selective_scan.py."""
+    from repro.kernels.selective_scan import selective_scan as _ss
+    interpret = _interpret_default(interpret)
+    return _ss(x, dt, bmat, cmat, a, tile_di=tile_di, chunk_l=chunk_l,
+               interpret=interpret)

@@ -1,0 +1,44 @@
+"""Pallas TPU kernel for message packing (paper Listing 5, the pack loop).
+
+``out[k] = x[idx[k]]`` — extracting the condensed message values from the
+owned shard into a contiguous send buffer.  The shard lives whole in VMEM
+(shards on the comm axis are small: n/P elements); the irregular gather is
+VMEM-local, which is the entire point of the paper's pack/unpack design —
+irregularity never touches the slow memory level.
+
+Grid: (n_msg_blocks,) over the flattened padded message buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pack_gather"]
+
+
+def _kernel(x_ref, idx_ref, out_ref):
+    out_ref[...] = jnp.take(x_ref[...], idx_ref[...], axis=0)
+
+
+def pack_gather(
+    x: jax.Array,          # (shard,) owned values, fully VMEM-resident
+    idx: jax.Array,        # (m,) int32 local indices, padded
+    *,
+    block: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    m = idx.shape[0]
+    assert m % block == 0, "pad the message buffer to a block multiple"
+    grid = (m // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0,)),          # whole shard
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=interpret,
+    )(x, idx)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth; kernels are validated against
+these in interpret mode across shape/dtype sweeps (tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ellpack_spmv_ref", "pack_gather_ref", "stencil2d_ref",
+           "decode_attention_ref", "selective_scan_ref"]
+
+
+def ellpack_spmv_ref(diag, vals, cols, x):
+    """y = diag*x[:n] + sum_j vals[:, j] * x[cols[:, j]] (paper Listing 1).
+
+    ``x`` may be longer than n (private-copy dump slots); rows use global
+    indices, diag pairs with x[0:n].
+    """
+    n = diag.shape[0]
+    return diag * x[:n] + (vals * x[cols]).sum(axis=-1)
+
+
+def pack_gather_ref(x, idx):
+    """Message packing (paper Listing 5 pack loop): out[k] = x[idx[k]]."""
+    return x[idx]
+
+
+def stencil2d_ref(x, coef):
+    """One 5-point Jacobi step on the interior; boundary rows/cols copied.
+
+    x: (M, N).  y[i,j] = x[i,j] + coef*(x[i-1,j]+x[i+1,j]+x[i,j-1]+x[i,j+1]
+    - 4 x[i,j]) for 1<=i<M-1, 1<=j<N-1  (paper Listing 8).
+    """
+    up = x[:-2, 1:-1]
+    down = x[2:, 1:-1]
+    left = x[1:-1, :-2]
+    right = x[1:-1, 2:]
+    mid = x[1:-1, 1:-1]
+    interior = mid + coef * (up + down + left + right - 4.0 * mid)
+    return x.at[1:-1, 1:-1].set(interior)
+
+
+def decode_attention_ref(q, k, v, *, scale=None):
+    """Single-token GQA attention: q (B, H, D), k/v (B, S, Hkv, D)
+    (the framework's cache layout).
+
+    H must be a multiple of Hkv (grouped queries share a KV head).
+    Returns (B, H, D).
+    """
+    b, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qg = q.reshape(b, hkv, group, d)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def selective_scan_ref(x, dt, bmat, cmat, a):
+    """Sequential mamba-1 recurrence oracle: x/dt (B, L, di),
+    bmat/cmat (B, L, st), a (di, st) -> y (B, L, di)."""
+    bshape, l, di = x.shape[0], x.shape[1], x.shape[2]
+    st = bmat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(h, t):
+        da = jnp.exp(dtf[:, t, :, None] * af[None])          # (B, di, st)
+        h = da * h + (dtf[:, t] * xf[:, t])[..., None] * bf[:, t, None, :]
+        y = jnp.einsum("bds,bs->bd", h, cf[:, t])
+        return h, y
+
+    h0 = jnp.zeros((bshape, di, st), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(l))
+    return ys.swapaxes(0, 1).astype(x.dtype)

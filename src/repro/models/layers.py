@@ -1,0 +1,298 @@
+"""Shared neural building blocks (pure-functional, params = nested dicts).
+
+Everything is written against abstract shapes so the whole zoo can be
+initialized under ``jax.eval_shape`` for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "init_linear", "linear", "init_norm", "norm_apply", "rope",
+    "attention", "init_attention", "attention_fwd", "mlp_fwd", "init_mlp",
+]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in, d_out, *, bias=False, dtype=jnp.float32, scale=None):
+    if scale is None:
+        scale = d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_norm(key, d, *, kind="rmsnorm", dtype=jnp.float32):
+    del key
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p, x, *, kind="rmsnorm", eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, *, theta=1e4):
+    """x: (..., S, H, D). positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]   # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _dense_attention(q, k, v, *, causal, window, q_pos0=0, kv_pos0=0,
+                     kv_len=None):
+    """q: (B, Sq, Hkv, G, D); k/v: (B, Skv, Hkv, D). f32 softmax."""
+    d = q.shape[-1]
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d ** -0.5)
+    sq, sk = q.shape[1], k.shape[1]
+    qi = q_pos0 + jnp.arange(sq)[:, None]
+    ki = kv_pos0 + jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window:
+        mask &= ki > qi - window
+    if kv_len is not None:  # decode: only positions < kv_len are valid
+        mask &= ki < kv_len
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _flash_attention(q, k, v, *, causal, window, q_chunk=1024, kv_chunk=1024):
+    """Memory-bounded attention: scan over q chunks (outer) and kv chunks
+    (inner) with running log-sum-exp — the flash algorithm in lax.scan form.
+
+    Fully-masked kv chunks are skipped *statically is impossible* under scan;
+    they are computed and masked (counted as waste in useful_flops_ratio; see
+    EXPERIMENTS.md §Perf for the prefill optimization that removes it).
+    """
+    b, sq, hkv, g, d = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0
+    scale = d ** -0.5
+
+    qs = q.reshape(b, nq, q_chunk, hkv, g, d).astype(jnp.float32)
+    ks = k.reshape(b, nk, kv_chunk, hkv, d).astype(jnp.float32)
+    vs = v.reshape(b, nk, kv_chunk, hkv, d).astype(jnp.float32)
+
+    def q_body(_, qi_and_idx):
+        qc, iq = qi_and_idx  # (b, qc, hkv, g, d)
+        m0 = jnp.full((b, hkv, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        acc0 = jnp.zeros((b, q_chunk, hkv, g, d), jnp.float32)
+
+        def kv_body(carry, kc_vc_idx):
+            m, l, acc = carry
+            kc, vc, ik = kc_vc_idx
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc) * scale
+            qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window:
+                mask &= kpos > qpos - window
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bqhgd", p, vc
+            )
+            return (m_new, l_new, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, acc0),
+            (ks.swapaxes(0, 1), vs.swapaxes(0, 1), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(
+        q_body, None, (qs.swapaxes(0, 1), jnp.arange(nq))
+    )  # (nq, b, qc, hkv, g, d)
+    out = outs.swapaxes(0, 1).reshape(b, sq, hkv, g, d)
+    return out.astype(q.dtype)
+
+
+def _swa_banded_attention(q, k, v, *, window, q_chunk=2048):
+    """Sliding-window attention that only touches the diagonal band.
+
+    Every q chunk attends a (q_chunk + window)-wide kv band sliced around
+    the diagonal — the compute/memory-optimal schedule for SWA (the dense
+    flash path wastes O(S/window) work on fully-masked chunks; see
+    EXPERIMENTS.md §Perf cell C).  q: (B, S, Hkv, G, D); k/v: (B, S, Hkv, D).
+    """
+    b, sq, hkv, g, d = q.shape
+    q_chunk = min(q_chunk, sq)
+    band = min(q_chunk + window, sq)
+    nq = sq // q_chunk
+    scale = d ** -0.5
+
+    def body(_, iq):
+        qc = jax.lax.dynamic_slice_in_dim(
+            q, iq * q_chunk, q_chunk, 1).astype(jnp.float32)
+        start = jnp.clip(iq * q_chunk - window, 0, sq - band)
+        kc = jax.lax.dynamic_slice_in_dim(k, start, band, 1).astype(
+            jnp.float32)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, band, 1).astype(
+            jnp.float32)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc) * scale
+        qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None]
+        kpos = start + jnp.arange(band)[None, :]
+        mask = (kpos <= qpos) & (kpos > qpos - window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", w, vc)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nq))
+    return outs.swapaxes(0, 1).reshape(b, sq, hkv, g, d)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_pos0=0, kv_len=None,
+              flash_threshold=4096):
+    """GQA attention. q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D)."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    self_attn = sq == k.shape[1] and kv_len is None
+    use_banded = (
+        causal and window and self_attn and sq > 2 * window
+        and sq % min(2048, sq) == 0
+    )
+    use_flash = (
+        sq > 1 and (sq * k.shape[1] > flash_threshold * flash_threshold // 4)
+        and sq % 512 == 0 and k.shape[1] % 512 == 0 and kv_len is None
+    )
+    if use_banded:
+        out = _swa_banded_attention(qg, k, v, window=window,
+                                    q_chunk=min(2048, sq))
+    elif use_flash:
+        out = _flash_attention(qg, k, v, causal=causal, window=window,
+                               q_chunk=min(2048, sq), kv_chunk=min(1024, k.shape[1]))
+    else:
+        out = _dense_attention(qg, k, v, causal=causal, window=window,
+                               q_pos0=q_pos0, kv_len=kv_len)
+    return out.reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + forward)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, *, d_model=None, dtype=jnp.float32):
+    d = d_model or cfg.d_model
+    hd, h, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], h * hd, d, dtype=dtype),
+    }
+
+
+def attention_fwd(p, x, cfg, *, kv_x=None, positions=None, causal=True,
+                  window=0, cache=None, cache_pos=None, use_rope=True):
+    """Self- or cross-attention.  ``cache``: optional dict {k, v} with
+    (B, Smax, Hkv, D) buffers for decode; ``cache_pos``: current length."""
+    b, sq, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = linear(p["wq"], x).reshape(b, sq, h, hd)
+    k = linear(p["wk"], src).reshape(b, src.shape[1], hkv, hd)
+    v = linear(p["wv"], src).reshape(b, src.shape[1], hkv, hd)
+
+    if positions is None:
+        positions = jnp.arange(sq)[None, :]
+    if use_rope and kv_x is None:
+        q = rope(q, positions, theta=cfg.rope_theta)
+        k = rope(k, positions, theta=cfg.rope_theta)
+
+    if cache is not None:
+        # decode: write new k/v at cache_pos, attend over the whole buffer
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        out = attention(q, ck, cv, causal=False, window=window,
+                        q_pos0=cache_pos, kv_len=cache_pos + sq)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        out = attention(q, k, v, causal=causal and kv_x is None, window=window)
+        new_cache = None
+
+    y = linear(p["wo"], out.reshape(b, sq, h * hd))
+    return (y, new_cache) if cache is not None else y
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, f, *, act="swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w1": init_linear(ks[0], d, f, dtype=dtype),
+         "w2": init_linear(ks[1], f, d, dtype=dtype)}
+    if act == "swiglu":
+        p["w3"] = init_linear(ks[2], d, f, dtype=dtype)
+    return p
+
+
+def mlp_fwd(p, x, *, act="swiglu"):
+    h = linear(p["w1"], x)
+    if act == "swiglu":
+        h = jax.nn.silu(h) * linear(p["w3"], x)
+    else:
+        h = jax.nn.gelu(h)
+    return linear(p["w2"], h)

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts block with the paper's communication-strategy ladder.
+
+Token->expert routing is the LM-scale instance of the paper's fine-grained
+irregular communication: each token (array element) must reach the shard
+owning its expert (owner thread).  Following DESIGN.md §4:
+
+* ``tp_local``  — experts are *weight-sharded* over the model axis (tensor
+  parallel); tokens never move.  The analogue of the paper's single-node
+  case where no remote transfers exist (natural for few-expert models:
+  mixtral's 8 experts < 16-way model axis).
+* ``ep_a2a``    — experts are sharded over the model axis (expert parallel);
+  tokens are *sort-packed* into per-expert capacity-bounded buffers —
+  message condensing (only selected tokens move) and consolidation (one
+  buffer per expert) with a static capacity bound standing in for the
+  paper's one-time plan, as XLA's static shapes require.  The resharding of
+  the packed buffer is where GSPMD materializes the all-to-all.
+
+Dispatch is computed per data-parallel group (the ``G`` leading dim) so no
+collective sort is ever needed — the paper's per-thread preparation step.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear
+
+__all__ = ["init_moe", "moe_fwd", "moe_capacity"]
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "router": init_linear(ks[0], d, e, dtype=dtype),
+        "w1": jax.random.normal(ks[1], (e, d, f), dtype) * scale,
+        "w2": jax.random.normal(ks[2], (e, f, d), dtype) * (f ** -0.5),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = jax.random.normal(ks[3], (e, d, f), dtype) * scale
+    return p
+
+
+def moe_capacity(tokens_per_group: int, cfg) -> int:
+    c = math.ceil(
+        tokens_per_group * cfg.experts_per_token / cfg.num_experts
+        * cfg.capacity_factor
+    )
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _expert_mlp(p, buf, act):
+    """buf: (G, E, C, D) -> (G, E, C, D)."""
+    w1 = p["w1"].astype(buf.dtype)
+    w2 = p["w2"].astype(buf.dtype)
+    h = jnp.einsum("gecd,edf->gecf", buf, w1)
+    if act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum(
+            "gecd,edf->gecf", buf, p["w3"].astype(buf.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("gecf,efd->gecd", h, w2)
+
+
+def moe_fwd(p, x, cfg, *, constrain=None, aux=None):
+    """x: (G, T, D) tokens grouped by data-parallel rank.
+
+    ``constrain``: optional fn(array, stage) -> array applying sharding
+    constraints; stage in {"dispatch", "expert"} (runtime/sharding.py).
+    ``aux``: optional dict populated with the load-balancing loss.
+    """
+    g, t, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = moe_capacity(t, cfg)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", x, p["router"]["w"].astype(x.dtype)
+    ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)               # (G, T, E)
+    top_p, top_e = jax.lax.top_k(probs, k)                # (G, T, k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+
+    if aux is not None:
+        # Switch-style load-balance loss: E * mean(frac_tokens * frac_prob)
+        me = probs.mean(axis=1)                           # (G, E)
+        ce = jax.nn.one_hot(top_e[..., 0], e).mean(axis=1)
+        aux["moe_loss"] = (e * (me * ce).sum(-1)).mean()
+
+    # ---- condensed dispatch: sort tokens by expert, pack to capacity ----
+    flat_e = top_e.reshape(g, t * k)
+    flat_w = top_p.reshape(g, t * k)
+    sort_idx = jnp.argsort(flat_e, axis=-1)               # (G, T*k) stable
+    se = jnp.take_along_axis(flat_e, sort_idx, axis=-1)
+    counts = jax.nn.one_hot(flat_e, e, dtype=jnp.int32).sum(axis=1)  # (G, E)
+    seg_start = jnp.cumsum(counts, axis=-1) - counts      # exclusive
+    pos = jnp.arange(t * k)[None] - jnp.take_along_axis(seg_start, se, axis=-1)
+    keep = pos < c
+    dest = jnp.where(keep, se * c + pos, e * c)           # dump slot
+    tok = sort_idx // k
+
+    gather_tok = jnp.take_along_axis(x, tok[..., None], axis=1)  # (G,T*k,D)
+
+    def scatter_one(vals, dst):
+        buf = jnp.zeros((e * c + 1, d), vals.dtype)
+        return buf.at[dst].set(vals)[: e * c]
+
+    buf = jax.vmap(scatter_one)(gather_tok, dest).reshape(g, e, c, d)
+    if constrain is not None:
+        buf = constrain(buf, "expert")                    # -> a2a under EP
+
+    out_buf = _expert_mlp(p, buf, cfg.act)                # (G, E, C, D)
+    if constrain is not None:
+        out_buf = constrain(out_buf, "dispatch")          # -> back to dp
+
+    flat_out = jnp.concatenate(
+        [out_buf.reshape(g, e * c, d),
+         jnp.zeros((g, 1, d), out_buf.dtype)], axis=1)
+    y_sorted = jnp.take_along_axis(flat_out, dest[..., None], axis=1)
+    w_sorted = jnp.take_along_axis(flat_w, sort_idx, axis=-1)
+    y_sorted = y_sorted * (w_sorted * keep)[..., None].astype(y_sorted.dtype)
+
+    def combine_one(ys, tk):
+        return jnp.zeros((t, d), ys.dtype).at[tk].add(ys)
+
+    return jax.vmap(combine_one)(y_sorted, tok)           # (G, T, D)

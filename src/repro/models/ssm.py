@@ -1,0 +1,152 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b; hymba's SSM heads).
+
+Training path uses a chunked scan: an outer ``lax.scan`` over sequence chunks
+carries the (B, d_inner, state) hidden state; within a chunk the linear
+recurrence runs as an associative scan.  This bounds the materialized state
+tensor to one chunk (the TPU-memory analogue of the paper's "plan bulk
+transfers instead of fine-grained access": state stays VMEM/HBM-local per
+chunk instead of materializing (B, L, d_inner, state)).
+
+Decode path is the exact single-step recurrence with a rolling conv window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+__all__ = ["init_ssm", "ssm_fwd", "ssm_decode_step", "init_ssm_cache"]
+
+
+def init_ssm(key, cfg, *, d_model=None, d_inner=None, dtype=jnp.float32):
+    d = d_model or cfg.d_model
+    di = d_inner or cfg.d_inner
+    st, dr, dc = cfg.ssm_state, cfg.ssm_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (dc, di), dtype) * (dc ** -0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_linear(ks[2], di, dr + 2 * st, dtype=dtype),
+        "dt_proj": init_linear(ks[3], dr, di, bias=True, dtype=dtype),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": init_linear(ks[4], di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, L, di); w: (K, di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _selective_scan_chunk(h0, da, dbx, c):
+    """Linear recurrence h_t = da_t * h_{t-1} + dbx_t within one chunk via
+    associative scan; returns per-step h and final h.
+
+    da, dbx: (B, C, di, st); c: (B, C, st); h0: (B, di, st).
+    """
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, b1 * a2 + b2
+
+    da0 = jnp.concatenate([jnp.ones_like(da[:, :1]), da[:, 1:]], axis=1)
+    # fold h0 into the first step: h_1 = da_1*h0 + dbx_1
+    dbx = dbx.at[:, 0].add(da[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (da0, dbx), axis=1)
+    return h, h[:, -1]
+
+
+def ssm_fwd(p, u, cfg, *, d_inner=None, chunk=256, scan_dtype=jnp.float32):
+    """u: (B, L, d). Returns (B, L, d).
+
+    ``scan_dtype=jnp.bfloat16`` halves the HBM traffic of the chunked
+    recurrence (the dominant term at long sequence; EXPERIMENTS.md §Perf
+    cell C).  The decay exponent and boundary states stay f32; only the
+    within-chunk scan payload is reduced — validated against the f32 path
+    in tests/test_moe_ssm.py.
+    """
+    di = d_inner or cfg.d_inner
+    st, dr = cfg.ssm_state, cfg.ssm_dt_rank
+    b, l, _ = u.shape
+    xz = linear(p["in_proj"], u)
+    x, z = jnp.split(xz, 2, axis=-1)                      # (B, L, di)
+    x = _causal_conv(x, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    x = jax.nn.silu(x)
+
+    dbc = linear(p["x_proj"], x)
+    dt, bmat, cmat = jnp.split(dbc, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt)).astype(jnp.float32)  # (B,L,di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (di, st)
+
+    chunk = min(chunk, l)
+    assert l % chunk == 0
+    nchunks = l // chunk
+    xs = x.astype(jnp.float32).reshape(b, nchunks, chunk, di)
+    dts = dt.reshape(b, nchunks, chunk, di)
+    bs = bmat.astype(jnp.float32).reshape(b, nchunks, chunk, st)
+    cs = cmat.astype(jnp.float32).reshape(b, nchunks, chunk, st)
+
+    def body(h, args):
+        xc, dtc, bc, cc = args                           # (B, C, ...)
+        # decay computed in f32, scan payload in scan_dtype
+        da = jnp.exp(dtc[..., None] * a).astype(scan_dtype)
+        dbx = ((dtc * xc)[..., None] * bc[:, :, None, :]).astype(scan_dtype)
+        hs, h_last = _selective_scan_chunk(
+            h.astype(scan_dtype), da, dbx, cc)
+        yc = jnp.einsum("bcds,bcs->bcd", hs.astype(jnp.float32), cc)
+        return h_last.astype(jnp.float32), yc
+
+    h0 = jnp.zeros((b, di, st), jnp.float32)
+    _, ys = jax.lax.scan(
+        body, h0,
+        (xs.swapaxes(0, 1), dts.swapaxes(0, 1), bs.swapaxes(0, 1),
+         cs.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1).reshape(b, l, di)
+    y = y + xs.reshape(b, l, di) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return linear(p["out_proj"], y.astype(u.dtype))
+
+
+def init_ssm_cache(batch, cfg, *, d_inner=None, dtype=jnp.float32):
+    di = d_inner or cfg.d_inner
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+    }
+
+
+def ssm_decode_step(p, u, cache, cfg, *, d_inner=None):
+    """u: (B, 1, d). Exact single-step recurrence. Returns (y, new_cache)."""
+    di = d_inner or cfg.d_inner
+    st, dr = cfg.ssm_state, cfg.ssm_dt_rank
+    b = u.shape[0]
+    xz = linear(p["in_proj"], u)                          # (B, 1, 2di)
+    x, z = jnp.split(xz, 2, axis=-1)
+    conv_in = jnp.concatenate([cache["conv"], x], axis=1)  # (B, K, di)
+    w = p["conv_w"].astype(x.dtype)
+    xc = (conv_in * w[None]).sum(axis=1, keepdims=True) \
+        + p["conv_b"].astype(x.dtype)[None, None]
+    xc = jax.nn.silu(xc)
+
+    dbc = linear(p["x_proj"], xc)
+    dt, bmat, cmat = jnp.split(dbc, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt)).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[..., None] * a)[:, 0]                  # (B, di, st)
+    dbx = (dt * xc.astype(jnp.float32))[..., None][:, 0] \
+        * bmat.astype(jnp.float32)[:, 0, None, :]
+    h = da * cache["h"] + dbx
+    y = jnp.einsum("bds,bs->bd", h, cmat.astype(jnp.float32)[:, 0])[:, None]
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = linear(p["out_proj"], y.astype(u.dtype))
+    return out, {"h": h, "conv": conv_in[:, 1:]}

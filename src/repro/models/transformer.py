@@ -1,0 +1,570 @@
+"""The model zoo: one scan-over-layers transformer covering all 10 assigned
+architectures (dense / MoE / SSM / hybrid / enc-dec / VLM).
+
+Everything is pure-functional: ``Model.init_params`` builds a nested-dict
+pytree (safe under ``jax.eval_shape`` for the dry-run), ``Model.forward``
+is the training forward, ``Model.init_cache``/``prefill``/``decode_step``
+serve inference.  Sharding is injected from outside via the ``RunCtx``
+constraint callbacks (runtime/sharding.py), keeping model code
+mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+__all__ = ["RunCtx", "Model", "lm_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Runtime context: grouping for MoE dispatch, remat policy, and
+    sharding-constraint hooks (None = single-device smoke)."""
+
+    moe_groups: int = 1
+    remat: str = "full"          # none | full | dots
+    constrain: Callable[[jax.Array, str], jax.Array] | None = None
+    act_dtype: Any = jnp.bfloat16
+    vocab_shards: int = 1        # model-axis size (embed strategy divisibility)
+    scan_barrier: bool = True    # optimization_barrier on the layer-scan
+    # carry: stops XLA hoisting the residual-stack bf16->f32 convert out of
+    # the backward loop (a whole-stack f32 copy; see EXPERIMENTS.md §Perf)
+    remat_groups: int = 1        # >1: nested (sqrt) remat — outer scan over
+    # groups of layers is checkpointed, so only G boundary residuals are
+    # saved instead of L (peak activations / L*(1/G + G/L); one extra fwd)
+    cast_params_once: bool = False  # cast layer stack f32->act_dtype before
+    # the scan: FSDP all-gathers then move bf16 instead of f32 master params
+    # (2x weight-collective cut; see EXPERIMENTS.md §Perf)
+    ssm_scan_dtype: Any = jnp.float32  # bf16 halves SSM recurrence traffic
+
+    def c(self, x, tag):
+        return self.constrain(x, tag) if self.constrain is not None else x
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _stack_init(key, n, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg, dtype, *, kind: str):
+    """kind: dense | moe | ssm | hybrid | encdec_dec | enc | cross"""
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"ln1": L.init_norm(ks[0], cfg.d_model, kind=cfg.norm)}
+    if kind == "ssm":
+        p["ssm"] = S.init_ssm(ks[1], cfg, dtype=dtype)
+        return p
+    if kind == "cross":
+        p["attn"] = L.init_attention(ks[1], cfg, dtype=dtype)
+        p["ln2"] = L.init_norm(ks[2], cfg.d_model, kind=cfg.norm)
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, act=cfg.act,
+                              dtype=dtype)
+        return p
+    if kind in ("dense", "enc", "encdec_dec", "hybrid", "moe"):
+        p["attn"] = L.init_attention(ks[1], cfg, dtype=dtype)
+        p["ln2"] = L.init_norm(ks[2], cfg.d_model, kind=cfg.norm)
+        if kind == "hybrid":
+            p["ssm"] = S.init_ssm(ks[4], cfg, dtype=dtype)
+            p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, act=cfg.act,
+                                  dtype=dtype)
+        elif kind == "moe":
+            p["moe"] = M.init_moe(ks[3], cfg, dtype=dtype)
+            if cfg.dense_residual:
+                p["res_mlp"] = L.init_mlp(
+                    ks[5], cfg.d_model, cfg.residual_d_ff, act=cfg.act,
+                    dtype=dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, act=cfg.act,
+                                  dtype=dtype)
+        if kind == "encdec_dec":
+            p["ln_cross"] = L.init_norm(ks[6], cfg.d_model, kind=cfg.norm)
+            p["cross"] = L.init_attention(ks[7], cfg, dtype=dtype)
+        return p
+    raise ValueError(kind)
+
+
+def _mixer_fwd(p, h, cfg, ctx, *, kind, kv_ctx=None):
+    """The token-mixing half of a block (h already normed)."""
+    if kind == "ssm":
+        return S.ssm_fwd(p["ssm"], h, cfg, scan_dtype=ctx.ssm_scan_dtype)
+    if kind == "hybrid":
+        a = L.attention_fwd(p["attn"], h, cfg, causal=True,
+                            window=cfg.swa_window)
+        s = S.ssm_fwd(p["ssm"], h, cfg, scan_dtype=ctx.ssm_scan_dtype)
+        return 0.5 * (a + s)
+    if kind == "cross":
+        return L.attention_fwd(p["attn"], h, cfg, kv_x=kv_ctx, causal=False,
+                               use_rope=False)
+    causal = kind != "enc"
+    return L.attention_fwd(p["attn"], h, cfg, causal=causal,
+                           window=cfg.swa_window,
+                           use_rope=kind != "enc")
+
+
+def _ffn_fwd(p, x, cfg, ctx, *, kind):
+    h = L.norm_apply(p["ln2"], x, kind=cfg.norm)
+    if kind == "moe":
+        b, s_len, d = h.shape
+        g = min(ctx.moe_groups, b)
+        hg = h.reshape(g, (b // g) * s_len, d)
+        aux: dict = {}
+        out = M.moe_fwd(p["moe"], hg, cfg, constrain=ctx.constrain, aux=aux)
+        out = out.reshape(b, s_len, d)
+        if cfg.dense_residual:
+            out = out + L.mlp_fwd(p["res_mlp"], h, act=cfg.act)
+        return out
+    return L.mlp_fwd(p["mlp"], h, act=cfg.act)
+
+
+def _block_fwd(p, x, cfg, ctx, *, kind, kv_ctx=None):
+    h = L.norm_apply(p["ln1"], x, kind=cfg.norm)
+    x = x + ctx.c(_mixer_fwd(p, h, cfg, ctx, kind=kind, kv_ctx=kv_ctx), "act")
+    if kind == "encdec_dec":
+        hc = L.norm_apply(p["ln_cross"], x, kind=cfg.norm)
+        x = x + L.attention_fwd(p["cross"], hc, cfg, kv_x=kv_ctx,
+                                causal=False, use_rope=False)
+    if kind != "ssm":
+        x = x + ctx.c(_ffn_fwd(p, x, cfg, ctx, kind=kind), "act")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# decode-path blocks (single token, cache)
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg, batch, cache_len, dtype, *, kind, cross_len=0):
+    c: dict[str, Any] = {}
+    if kind in ("dense", "moe", "hybrid", "encdec_dec", "cross"):
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        if kind != "cross":
+            c["k"] = jnp.zeros((batch, cache_len, hkv, hd), dtype)
+            c["v"] = jnp.zeros((batch, cache_len, hkv, hd), dtype)
+            c["slot_pos"] = jnp.full((cache_len,), -1, jnp.int32)
+        if kind in ("encdec_dec", "cross"):
+            c["cross_k"] = jnp.zeros((batch, cross_len, hkv, hd), dtype)
+            c["cross_v"] = jnp.zeros((batch, cross_len, hkv, hd), dtype)
+    if kind in ("ssm", "hybrid"):
+        c["ssm"] = S.init_ssm_cache(batch, cfg, dtype=dtype)
+    return c
+
+
+def _attn_decode(p, x, cfg, cache, pos, *, window=0):
+    """x: (B, 1, D); ring-buffer KV cache with per-slot positions."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cache_len = cache["k"].shape[1]
+    q = L.linear(p["wq"], x).reshape(b, 1, h, hd)
+    k = L.linear(p["wk"], x).reshape(b, 1, hkv, hd)
+    v = L.linear(p["wv"], x).reshape(b, 1, hkv, hd)
+    positions = pos[None, None] if jnp.ndim(pos) == 0 else pos[:, None]
+    q = L.rope(q, positions, theta=cfg.rope_theta)
+    k = L.rope(k, positions, theta=cfg.rope_theta)
+
+    slot = pos % cache_len  # ring slot (== pos when cache_len >= seq)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    spos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+
+    valid = (spos >= 0) & (spos <= pos)
+    if window:
+        valid &= spos > pos - window
+    d = hd
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * (d ** -0.5)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    y = L.linear(p["wo"], out)
+    return y, {"k": ck, "v": cv, "slot_pos": spos}
+
+
+def _cross_decode(p, x, cfg, cache):
+    """Cross-attention against precomputed (cached) encoder/image KV."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = L.linear(p["wq"], x).reshape(b, 1, h, hd)
+    out = L.attention(q, cache["cross_k"], cache["cross_v"], causal=False)
+    return L.linear(p["wo"], out.reshape(b, 1, h * hd))
+
+
+def _block_decode(p, x, cfg, ctx, cache, pos, *, kind):
+    h = L.norm_apply(p["ln1"], x, kind=cfg.norm)
+    new_cache = dict(cache)
+    if kind == "ssm":
+        y, new_cache["ssm"] = S.ssm_decode_step(p["ssm"], h, cache["ssm"], cfg)
+        return x + y, new_cache
+    if kind == "hybrid":
+        a, kvc = _attn_decode(p["attn"], h, cfg, cache, pos,
+                              window=cfg.swa_window)
+        s_out, new_cache["ssm"] = S.ssm_decode_step(
+            p["ssm"], h, cache["ssm"], cfg)
+        new_cache.update(kvc)
+        x = x + 0.5 * (a + s_out)
+    elif kind == "cross":
+        x = x + _cross_decode(p["attn"], h, cfg, cache)
+    else:
+        a, kvc = _attn_decode(p["attn"], h, cfg, cache, pos,
+                              window=cfg.swa_window)
+        new_cache.update(kvc)
+        x = x + a
+        if kind == "encdec_dec":
+            hc = L.norm_apply(p["ln_cross"], x, kind=cfg.norm)
+            x = x + _cross_decode(p["cross"], hc, cfg, cache)
+    if kind != "ssm":
+        x = x + _ffn_fwd(p, x, cfg, ctx, kind=kind)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_fwd(p, tokens, cfg, ctx):
+    w = p["w"]
+    sharded = cfg.vocab_size % ctx.vocab_shards == 0 and ctx.vocab_shards > 1
+    if cfg.embed_gather == "replicate" or not sharded:
+        # naive: gather from a (conceptually) replicated table — also the
+        # fallback when the vocab does not divide the model axis
+        x = w.astype(ctx.act_dtype)[tokens]
+        return x
+    # onehot_psum: vocab-sharded table; the contraction over V turns the
+    # irregular gather into a planned reduction (the condensed analogue).
+    # Chunked over S under remat so the one-hot never materializes whole.
+    b, s = tokens.shape
+    chunk = min(512, s)
+    if s % chunk:
+        oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=ctx.act_dtype)
+        return oh @ w.astype(ctx.act_dtype)
+    nc = s // chunk
+    ts = tokens.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(_, tc):
+        oh = jax.nn.one_hot(tc, cfg.vocab_size, dtype=ctx.act_dtype)
+        return None, oh @ w.astype(ctx.act_dtype)
+
+    _, xs = jax.lax.scan(body, None, ts)                 # (nc, B, C, D)
+    return xs.swapaxes(0, 1).reshape(b, s, -1)
+
+
+def lm_loss(logits, labels, mask=None):
+    """Cross-entropy with vocab-sharded logits (one-hot contraction keeps
+    the sharded dim out of gather ops)."""
+    v = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    oh = jax.nn.one_hot(labels, v, dtype=jnp.float32)
+    ll = (oh * lf).sum(-1)
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def fused_ce_loss(x, head, labels, *, chunk=512, constrain=None):
+    """Memory-fused cross-entropy: the (B, S, V) logits tensor is never
+    materialized — the head matmul + log-softmax run per sequence chunk
+    under remat (the same "plan bulk movement, keep irregularity local"
+    principle applied to the loss).  x: (B, S, D) post-norm hidden."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xs = x.reshape(b, nc, chunk, d).swapaxes(0, 1)       # (nc, B, C, D)
+    ls = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, args):
+        xc, lc = args
+        logits = xc @ head.astype(xc.dtype)              # (B, C, V)
+        if constrain is not None:
+            logits = constrain(logits, "logits")
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        oh = jax.nn.one_hot(lc, lf.shape[-1], dtype=jnp.float32)
+        ll = (oh * lf).sum(-1)
+        return acc + (lse - ll).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    """Family-dispatching model wrapper around the pure functions above."""
+
+    def __init__(self, cfg, ctx: RunCtx | None = None):
+        self.cfg = cfg
+        self.ctx = ctx or RunCtx()
+        self.kind = {
+            "dense": "dense", "moe": "moe", "ssm": "ssm", "hybrid": "hybrid",
+            "encdec": "encdec_dec", "vlm": "dense",
+        }[cfg.family]
+
+    # ---- init ----
+    def init_params(self, key):
+        cfg = self.cfg
+        dtype = jnp.float32  # master params; cast to act_dtype in forward
+        ks = jax.random.split(key, 8)
+        p: dict[str, Any] = {
+            "embed": {"w": jax.random.normal(
+                ks[0], (cfg.vocab_size, cfg.d_model), dtype) * 0.02},
+            "final_norm": L.init_norm(ks[1], cfg.d_model, kind=cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {"w": jax.random.normal(
+                ks[2], (cfg.d_model, cfg.vocab_size), dtype)
+                * cfg.d_model ** -0.5}
+
+        if cfg.is_vlm and cfg.cross_attn_period:
+            per = cfg.cross_attn_period
+            groups = cfg.num_layers // per
+            p["groups"] = {
+                "self": _stack_init(
+                    ks[3], groups,
+                    lambda k: _stack_init(
+                        k, per - 1,
+                        lambda k2: _init_block(k2, cfg, dtype, kind="dense"))),
+                "cross": _stack_init(
+                    ks[4], groups,
+                    lambda k: _init_block(k, cfg, dtype, kind="cross")),
+            }
+        else:
+            p["layers"] = _stack_init(
+                ks[3], cfg.num_layers,
+                lambda k: _init_block(k, cfg, dtype, kind=self.kind))
+        if cfg.is_encdec:
+            p["encoder"] = {
+                "layers": _stack_init(
+                    ks[5], cfg.encoder_layers,
+                    lambda k: _init_block(k, cfg, dtype, kind="enc")),
+                "norm": L.init_norm(ks[6], cfg.d_model, kind=cfg.norm),
+            }
+        return p
+
+    # ---- training forward ----
+    def hidden(self, params, tokens, *, extra=None):
+        """Post-final-norm hidden states (B, S, D)."""
+        cfg, ctx = self.cfg, self.ctx
+        x = ctx.c(_embed_fwd(params["embed"], tokens, cfg, ctx), "act")
+
+        kv_ctx = None
+        if cfg.is_encdec:
+            kv_ctx = self._encode(params["encoder"], extra["frames"])
+        if cfg.is_vlm:
+            kv_ctx = extra["image_embeds"].astype(ctx.act_dtype)
+
+        if ctx.cast_params_once and "layers" in params:
+            params = dict(params)
+            params["layers"] = jax.tree.map(
+                lambda a: a.astype(ctx.act_dtype)
+                if jnp.issubdtype(a.dtype, jnp.floating) else a,
+                params["layers"])
+
+        if cfg.is_vlm and cfg.cross_attn_period:
+            x = self._vlm_stack(params["groups"], x, kv_ctx)
+        elif ctx.remat_groups > 1 and cfg.num_layers % ctx.remat_groups == 0:
+            g = ctx.remat_groups
+            per = cfg.num_layers // g
+            grouped = jax.tree.map(
+                lambda a: a.reshape(g, per, *a.shape[1:]), params["layers"])
+
+            def group_body(x, gp):
+                def inner(x2, lp):
+                    return self._scan_body(x2, lp, kv_ctx=kv_ctx)
+                x, _ = jax.lax.scan(inner, x, gp)
+                return x, None
+
+            x, _ = jax.lax.scan(_remat(group_body, ctx.remat), x, grouped)
+        else:
+            body = _remat(
+                functools.partial(self._scan_body, kv_ctx=kv_ctx), ctx.remat)
+            x, _ = jax.lax.scan(body, x, params["layers"])
+
+        return L.norm_apply(params["final_norm"], x, kind=cfg.norm)
+
+    def head_weight(self, params):
+        return (params["embed"]["w"].T if self.cfg.tie_embeddings
+                else params["lm_head"]["w"])
+
+    def forward(self, params, tokens, *, extra=None, last_only=False):
+        """tokens: (B, S) int32.  extra: {"frames"|"image_embeds": (B,T,D)}.
+        Returns logits (B, S, V) — or (B, 1, V) when ``last_only`` (prefill:
+        the head matmul runs on the final position only)."""
+        ctx = self.ctx
+        x = self.hidden(params, tokens, extra=extra)
+        if last_only:
+            x = x[:, -1:, :]
+        logits = x @ self.head_weight(params).astype(x.dtype)
+        return ctx.c(logits, "logits")
+
+    def loss(self, params, tokens, labels, *, extra=None, chunk=512):
+        """Fused chunked cross-entropy (never materializes full logits)."""
+        x = self.hidden(params, tokens, extra=extra)
+        return fused_ce_loss(x, self.head_weight(params), labels,
+                             chunk=chunk, constrain=self.ctx.constrain)
+
+    def _scan_body(self, x, layer_p, *, kv_ctx=None):
+        if self.ctx.scan_barrier:
+            x = jax.lax.optimization_barrier(x)
+        return _block_fwd(layer_p, x, self.cfg, self.ctx, kind=self.kind,
+                          kv_ctx=kv_ctx), None
+
+    def _vlm_stack(self, groups_p, x, kv_ctx):
+        cfg, ctx = self.cfg, self.ctx
+
+        def group_body(x, gp):
+            def self_body(x2, lp):
+                return _block_fwd(lp, x2, cfg, ctx, kind="dense"), None
+            x, _ = jax.lax.scan(_remat(self_body, ctx.remat), x, gp["self"])
+            x = _remat(
+                lambda x3: _block_fwd(gp["cross"], x3, cfg, ctx,
+                                      kind="cross", kv_ctx=kv_ctx),
+                ctx.remat)(x)
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x, groups_p)
+        return x
+
+    def _encode(self, enc_p, frames):
+        cfg, ctx = self.cfg, self.ctx
+        x = frames.astype(ctx.act_dtype)
+
+        def body(x, lp):
+            return _block_fwd(lp, x, cfg, ctx, kind="enc"), None
+
+        x, _ = jax.lax.scan(_remat(body, ctx.remat), x, enc_p["layers"])
+        return L.norm_apply(enc_p["norm"], x, kind=cfg.norm)
+
+    # ---- serving ----
+    def init_cache(self, batch, cache_len, *, cross_len=0, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.swa_window:
+            cache_len = min(cache_len, cfg.swa_window)
+
+        def one(_):
+            return _init_layer_cache(cfg, batch, cache_len, dtype,
+                                     kind=self.kind, cross_len=cross_len)
+
+        if cfg.is_vlm and cfg.cross_attn_period:
+            per = cfg.cross_attn_period
+            groups = cfg.num_layers // per
+            layers = {
+                "self": jax.vmap(lambda i: jax.vmap(one)(
+                    jnp.arange(per - 1)))(jnp.arange(groups)),
+                "cross": jax.vmap(
+                    lambda i: _init_layer_cache(
+                        cfg, batch, cache_len, dtype, kind="cross",
+                        cross_len=cross_len))(jnp.arange(groups)),
+            }
+        else:
+            layers = jax.vmap(one)(jnp.arange(cfg.num_layers))
+        return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1). Returns (logits (B, 1, V), new_cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        x = ctx.c(_embed_fwd(params["embed"], tokens, cfg, ctx), "act")
+        pos = cache["pos"]
+
+        if cfg.is_vlm and cfg.cross_attn_period:
+            def group_body(x, args):
+                gp, gc = args
+
+                def self_body(x2, a2):
+                    lp, lc = a2
+                    y, nc = _block_decode(lp, x2, cfg, ctx, lc, pos,
+                                          kind="dense")
+                    return y, nc
+                x, nself = jax.lax.scan(
+                    self_body, x, (gp["self"], gc["self"]))
+                x, ncross = _block_decode(gp["cross"], x, cfg, ctx,
+                                          gc["cross"], pos, kind="cross")
+                return x, {"self": nself, "cross": ncross}
+
+            x, new_layers = jax.lax.scan(
+                group_body, x, (params["groups"], cache["layers"]))
+        else:
+            def body(x, args):
+                lp, lc = args
+                y, nc = _block_decode(lp, x, cfg, ctx, lc, pos,
+                                      kind=self.kind)
+                return y, nc
+
+            x, new_layers = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+
+        x = L.norm_apply(params["final_norm"], x, kind=cfg.norm)
+        head = (params["embed"]["w"].T if cfg.tie_embeddings
+                else params["lm_head"]["w"])
+        logits = ctx.c(x @ head.astype(x.dtype), "logits")
+        return logits, {"pos": pos + 1, "layers": new_layers}
+
+    def prefill_cross(self, params, cache, context):
+        """Fill cross-attention KV from encoder output / image embeds."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc = self._encode(params["encoder"], context)
+
+            def fill(lp, lc):
+                b = enc.shape[0]
+                hkv, hd = cfg.num_kv_heads, cfg.head_dim
+                k = L.linear(lp["cross"]["wk"], enc).reshape(b, -1, hkv, hd)
+                v = L.linear(lp["cross"]["wv"], enc).reshape(b, -1, hkv, hd)
+                lc = dict(lc)
+                lc["cross_k"] = k.astype(lc["cross_k"].dtype)
+                lc["cross_v"] = v.astype(lc["cross_v"].dtype)
+                return lc
+
+            new_layers = jax.vmap(fill)(params["layers"], cache["layers"])
+            return {**cache, "layers": new_layers}
+        if cfg.is_vlm:
+            ctx_e = context.astype(self.ctx.act_dtype)
+
+            def fill(gp, gc):
+                b = ctx_e.shape[0]
+                hkv, hd = cfg.num_kv_heads, cfg.head_dim
+                k = L.linear(gp["cross"]["attn"]["wk"], ctx_e).reshape(
+                    b, -1, hkv, hd)
+                v = L.linear(gp["cross"]["attn"]["wv"], ctx_e).reshape(
+                    b, -1, hkv, hd)
+                gc = dict(gc)
+                cc = dict(gc["cross"])
+                cc["cross_k"] = k.astype(cc["cross_k"].dtype)
+                cc["cross_v"] = v.astype(cc["cross_v"].dtype)
+                gc["cross"] = cc
+                return gc
+
+            new_layers = jax.vmap(fill)(params["groups"], cache["layers"])
+            return {**cache, "layers": new_layers}
+        return cache

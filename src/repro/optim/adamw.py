@@ -1,0 +1,118 @@
+"""AdamW + schedules + global-norm clipping, from scratch (no optax here).
+
+Pure-functional: ``init`` builds the state pytree (safe under eval_shape),
+``apply`` returns updated (params, state).  Learning-rate schedules are plain
+callables step->lr evaluated inside jit (lax-friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "cosine_schedule", "linear_warmup", "global_norm",
+           "clip_by_global_norm"]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def lr(step):
+        return base_lr * jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+    return lr
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        t = jnp.clip((step - warmup_steps) /
+                     max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * warm * cos
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    """AdamW with optional true mixed precision.
+
+    ``mixed_precision=True``: the params passed through the train step are
+    the bf16 COMPUTE copy (so every FSDP weight all-gather moves 2-byte
+    payloads); the f32 master weights live inside the optimizer state and
+    are the ones actually updated — the bf16 params are re-derived from the
+    master each step (Megatron-style)."""
+
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    mixed_precision: bool = False
+
+    def init(self, params) -> dict[str, Any]:
+        zeros = lambda t: jax.tree.map(  # noqa: E731
+            lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        state = {"m": zeros(params), "v": zeros(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if self.mixed_precision:
+            state["master"] = jax.tree.map(
+                lambda x: x.astype(jnp.float32), params)
+        return state
+
+    def cast_params(self, params, dtype=jnp.bfloat16):
+        """f32 master tree -> compute tree (used at init/restore time)."""
+        return jax.tree.map(
+            lambda x: x.astype(dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+    def apply(self, params, grads, state):
+        step = state["step"] + 1
+        if self.clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v, master):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + self.eps)
+            ref = master if master is not None else p.astype(jnp.float32)
+            if self.weight_decay:
+                u = u + self.weight_decay * ref
+            new_master = ref - lr * u
+            return new_master.astype(p.dtype), m2, v2, new_master
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_ma = (tdef.flatten_up_to(state["master"])
+                   if self.mixed_precision else [None] * len(flat_p))
+        out = [upd(p, g, m, v, ma) for p, g, m, v, ma
+               in zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        new_state = {"m": new_m, "v": new_v, "step": step}
+        if self.mixed_precision:
+            new_state["master"] = tdef.unflatten([o[3] for o in out])
+        return new_p, new_state, gnorm

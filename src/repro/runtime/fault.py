@@ -1,0 +1,88 @@
+"""Fault-tolerance utilities for the train/serve drivers (DESIGN.md §7).
+
+The failure model at 1000+ nodes: (a) hard node loss -> process dies ->
+relaunch resumes from the last committed checkpoint, possibly on a smaller
+mesh (elastic); (b) transient step failure (preemption notice, flaky
+collective) -> retry the step; (c) stragglers -> bulk-synchronous steps bound
+blast radius to one collective; we detect persistent stragglers host-side
+from step-time z-scores and surface them for re-slicing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable
+
+import numpy as np
+
+log = logging.getLogger("repro.fault")
+
+__all__ = ["StragglerWatch", "retrying", "StepTimer"]
+
+
+@dataclasses.dataclass
+class StragglerWatch:
+    """Host-side per-step wall-time watchdog.
+
+    A step slower than mean + z_thresh * std (over a sliding window) is
+    flagged; ``persistent`` trips after ``patience`` consecutive flags — the
+    driver's cue to checkpoint and re-slice away from the slow node.
+    """
+
+    window: int = 50
+    z_thresh: float = 4.0
+    patience: int = 3
+
+    def __post_init__(self):
+        self._times: list[float] = []
+        self._consecutive = 0
+
+    def observe(self, dt: float) -> bool:
+        flagged = False
+        hist = self._times[-self.window:]
+        if len(hist) >= 10:
+            mu, sd = float(np.mean(hist)), float(np.std(hist)) + 1e-9
+            if dt > mu + self.z_thresh * sd:
+                flagged = True
+        self._times.append(dt)
+        self._consecutive = self._consecutive + 1 if flagged else 0
+        if flagged:
+            log.warning("straggler: step took %.3fs (window mean %.3fs)",
+                        dt, np.mean(hist))
+        return flagged
+
+    @property
+    def persistent(self) -> bool:
+        return self._consecutive >= self.patience
+
+
+def retrying(fn: Callable, *, retries: int = 2, on_retry=None):
+    """Wrap a step callable with bounded retry (transient failures)."""
+
+    def wrapped(*a, **kw):
+        for attempt in range(retries + 1):
+            try:
+                return fn(*a, **kw)
+            except Exception as e:  # noqa: BLE001 - driver boundary
+                if attempt == retries:
+                    raise
+                log.warning("step failed (%s); retry %d/%d",
+                            e, attempt + 1, retries)
+                if on_retry is not None:
+                    on_retry(attempt, e)
+
+    return wrapped
+
+
+class StepTimer:
+    def __init__(self):
+        self._t0 = None
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.dt = time.perf_counter() - self._t0
+        return False

@@ -1,0 +1,63 @@
+"""Dry-run smoke: one cheap (arch x shape x mesh) cell end-to-end in a
+subprocess with the production 512-device host platform, plus unit checks of
+the input_specs/skip machinery that don't need devices."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def test_dryrun_whisper_decode_cell(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # dryrun.py sets its own 512-device flag
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-tiny", "--shape", "decode_32k",
+         "--mesh", "both", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "DRYRUN_ALL_OK" in proc.stdout
+    for tag in ("pod_16x16", "multipod_2x16x16"):
+        art = json.load(open(
+            tmp_path / f"whisper-tiny__decode_32k__{tag}.json"))
+        assert not art["skipped"]
+        assert art["flops_total"] > 0
+        assert art["memory_analysis"]["peak_bytes_per_device"] > 0
+        assert art["dominant"] in ("compute", "memory", "collective")
+        assert art["collective_ici_bytes"] >= 0
+    # the multi-pod cell must exercise the pod axis (DCI traffic appears)
+    mp = json.load(open(
+        tmp_path / "whisper-tiny__decode_32k__multipod_2x16x16.json"))
+    assert mp["num_devices"] == 512
+
+
+def test_skip_rules():
+    from repro.configs.registry import get_config
+    from repro.configs.shapes import SHAPES, skip_reason
+    # long_500k: runs only for sub-quadratic archs
+    runs = {n for n in ("mixtral-8x22b", "hymba-1.5b", "falcon-mamba-7b")}
+    from repro.configs.registry import ARCH_NAMES
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        r = skip_reason(cfg, SHAPES["long_500k"])
+        assert (r is None) == (name in runs), name
+        # every other shape always runs
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert skip_reason(cfg, SHAPES[s]) is None
+
+
+def test_model_flops_convention():
+    from repro.configs.registry import get_config
+    from repro.runtime.steps import model_flops
+    cfg = get_config("llama3-8b")
+    n = cfg.flops_param_count()
+    assert 6.5e9 < n < 8.5e9  # ~7B non-embedding params
+    t = model_flops(cfg, mode="train", batch=256, seq=4096)
+    assert t > 6 * n * 256 * 4096  # head term strictly adds
+    d = model_flops(cfg, mode="decode", batch=128, seq=32768)
+    assert d < t / 1000
