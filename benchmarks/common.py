@@ -26,46 +26,14 @@ def csv_row(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def calibrate_host(elem_bytes: int = 4):
-    """Measure the paper's four hardware parameters on THIS host, following
-    §6.2: a STREAM-like copy for w_private, a large ppermute ("ping-pong")
-    between host devices for w_remote, and a tiny ppermute for tau (the
-    per-message latency floor).  Host devices are one-core XLA threads, so
-    each device is modeled as its own "node" during validation — every
+    """Measure the paper's four hardware parameters on THIS host (§6.2).
+
+    Delegates to ``repro.core.tune.measure_hardware`` — the same calibration
+    the ``strategy="auto"`` engine uses — so benchmarks and the autotuner
+    always see identical numbers.  Host devices are one-core XLA threads, so
+    each device is modeled as its own "node" during validation: every
     inter-device message pays tau, exactly like the paper's inter-node
     accesses."""
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core.perfmodel import HardwareParams
+    from repro.core import tune
 
-    n = 1 << 22
-    x = jnp.arange(n, dtype=jnp.float32)
-    copy = jax.jit(lambda a: a * 1.0000001)
-    t_copy = timeit(copy, x, iters=10)
-    w_private = 2.0 * n * 4 / t_copy  # read + write
-
-    ndev = len(jax.devices())
-    if ndev > 1:
-        mesh = jax.make_mesh((ndev,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-        perm = [(i, (i + 1) % ndev) for i in range(ndev)]
-
-        def ring(a):
-            return jax.shard_map(
-                lambda v: jax.lax.ppermute(v, "data", perm), mesh=mesh,
-                in_specs=P("data"), out_specs=P("data"))(a)
-
-        big = jax.device_put(
-            jnp.zeros((ndev * (1 << 20),), jnp.float32),
-            NamedSharding(mesh, P("data")))
-        t_big = timeit(jax.jit(ring), big, iters=5)
-        tiny = jax.device_put(jnp.zeros((ndev * 8,), jnp.float32),
-                              NamedSharding(mesh, P("data")))
-        tau = timeit(jax.jit(ring), tiny, iters=20)
-        w_remote = (1 << 20) * 4 / max(t_big - tau, 1e-9)
-    else:
-        w_remote = w_private
-        tau = timeit(copy, jnp.zeros((8,), jnp.float32), iters=30)
-
-    return HardwareParams(
-        w_private=w_private, w_remote=w_remote, tau=tau, cacheline=64,
-        elem=elem_bytes, idx=4)
+    return tune.measure_hardware(elem_bytes=elem_bytes)

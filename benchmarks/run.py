@@ -6,9 +6,11 @@ with a single device (keeping plain ``python -m benchmarks.run`` working).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run table3 roofline
+  python -m benchmarks.run table3 --smoke            # CI-sized quick pass
 """
 from __future__ import annotations
 
+import inspect
 import os
 import sys
 
@@ -30,6 +32,7 @@ def main() -> None:
     _ensure_devices()
     from benchmarks import tables
 
+    smoke = "--smoke" in sys.argv[1:]
     which = [a for a in sys.argv[1:] if not a.startswith("-")]
     all_benches = {
         "table2": tables.table2_privatization,
@@ -43,7 +46,11 @@ def main() -> None:
         which = list(all_benches)
     print("name,us_per_call,derived")
     for name in which:
-        all_benches[name]()
+        fn = all_benches[name]
+        if smoke and "smoke" in inspect.signature(fn).parameters:
+            fn(smoke=True)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

@@ -15,18 +15,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import calibrate_host, csv_row, timeit
+from repro import compat
 from repro.core import perfmodel as pm
 from repro.core.heat2d import Heat2D
 from repro.core.matrix import make_mesh_like_matrix, spmv_ref_np
-from repro.core.plan import Topology, build_comm_plan
+from repro.core.plan import Topology
+from repro.core.plan_cache import get_comm_plan
 from repro.core.spmv import DistributedSpMV
 from repro.kernels import ops as kops
 
 
 def _mesh8():
     assert len(jax.devices()) >= 8, "run via benchmarks.run (8 host devices)"
-    return jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((8,), ("data",),
+                            axis_types=compat.auto_axis_types(1))
 
 
 # --------------------------------------------------------------------------
@@ -73,7 +75,9 @@ def table2_privatization(n=1 << 18, r_nz=16):
 # paper scale (16..1024 threads, Abel parameters)
 # --------------------------------------------------------------------------
 
-def table3_strategies(n=1 << 17, r_nz=16, iters=50):
+def table3_strategies(n=1 << 17, r_nz=16, iters=50, smoke=False):
+    if smoke:  # CI trajectory capture: small but same shape of output
+        n, iters = 1 << 14, 5
     print(f"# table3: strategies measured on 8 host devices (n={n}) + "
           "modeled at Abel scale")
     mesh = _mesh8()
@@ -82,7 +86,7 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50):
     x_host = np.random.default_rng(1).standard_normal(n).astype(np.float32)
     y_ref = spmv_ref_np(m, x_host)
     results = {}
-    for strategy in ("replicate", "blockwise", "condensed"):
+    for strategy in ("replicate", "blockwise", "condensed", "overlap"):
         eng = DistributedSpMV(m, mesh, strategy=strategy,
                               blocksize=n // 8 // 16, shards_per_node=4)
         x = eng.shard_vector(x_host)
@@ -91,8 +95,26 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50):
         t = timeit(eng, x, iters=iters)
         results[strategy] = t
         c = eng.counts
-        csv_row(f"table3.measured.{strategy}", t * 1e6,
-                f"vol_elems={c.total_condensed_volume() if strategy=='condensed' else (c.total_blockwise_volume() if strategy=='blockwise' else 8*n)}")
+        vol = {"replicate": 8 * n,
+               "blockwise": c.total_blockwise_volume()}.get(
+                   strategy, c.total_condensed_volume())
+        csv_row(f"table3.measured.{strategy}", t * 1e6, f"vol_elems={vol}")
+
+    # the model's pick ("auto"): measured like the fixed rungs, plus the
+    # predicted ordering it was derived from
+    eng = DistributedSpMV(m, mesh, strategy="auto",
+                          blocksize=n // 8 // 16, shards_per_node=4)
+    x = eng.shard_vector(x_host)
+    np.testing.assert_allclose(np.asarray(eng(x)), y_ref, rtol=2e-4,
+                               atol=2e-4)
+    t = timeit(eng, x, iters=iters)
+    results["auto"] = t
+    order = ">".join(s for s, _ in sorted(eng.predicted_times.items(),
+                                          key=lambda kv: kv[1]))
+    best_fixed = min(results[s] for s in results if s != "auto")
+    csv_row("table3.measured.auto", t * 1e6,
+            f"resolved={eng.strategy} predicted_order={order} "
+            f"vs_best_fixed={t/best_fixed:.2f}x")
 
     # modeled at paper scale with Abel parameters (prediction deliverable)
     print("# table3 model: Abel params, threads=16..1024 (seconds/1000 iters)")
@@ -102,7 +124,7 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50):
         topo = Topology(threads, 16)
         mm = make_mesh_like_matrix(n, r_nz, locality_window=n // 64,
                                    long_range_frac=0.02, seed=1)
-        plan = build_comm_plan(mm.cols, n, threads,
+        plan = get_comm_plan(mm.cols, n, threads,
                                blocksize=max(64, n // threads // 8),
                                topology=topo)
         w = pm.SpmvWorkload(n=n, r_nz=r_nz, p=threads,
@@ -113,7 +135,8 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50):
                 t["v3_condensed"] * 1e6 * 1000,
                 f"v1={t['v1_finegrained']*1000:.2f}s "
                 f"v2={t['v2_blockwise']*1000:.2f}s "
-                f"v3={t['v3_condensed']*1000:.2f}s per-1000")
+                f"v3={t['v3_condensed']*1000:.2f}s "
+                f"overlap={t['overlap']*1000:.2f}s per-1000")
     return results
 
 
@@ -137,13 +160,13 @@ def table4_model_validation(n=1 << 17, r_nz=16):
     # tau (calibration note in benchmarks.common.calibrate_host)
     topo = Topology(8, 1)
     bs = n // 8 // 16
-    plan = build_comm_plan(m.cols, n, 8, blocksize=bs, topology=topo)
+    plan = get_comm_plan(m.cols, n, 8, blocksize=bs, topology=topo)
     w = pm.SpmvWorkload(n=n, r_nz=r_nz, p=8, blocksize=bs, topology=topo,
                         counts=plan.counts)
     preds = pm.predict_all(w, hw)
     name_map = {"replicate": "replicate", "blockwise": "v2_blockwise",
-                "condensed": "v3_condensed"}
-    for strategy in ("replicate", "blockwise", "condensed"):
+                "condensed": "v3_condensed", "overlap": "overlap"}
+    for strategy in ("replicate", "blockwise", "condensed", "overlap"):
         eng = DistributedSpMV(m, mesh, strategy=strategy, blocksize=bs,
                               shards_per_node=1)
         x = eng.shard_vector(x_host)
@@ -165,7 +188,7 @@ def fig2_volumes(n=1 << 16, r_nz=16, p=8):
                               long_range_frac=0.002, seed=2)
     shard = n // p
     for bs in (shard // 64, shard // 16, shard // 4, shard):
-        plan = build_comm_plan(m.cols, n, p, blocksize=bs,
+        plan = get_comm_plan(m.cols, n, p, blocksize=bs,
                                topology=Topology(p, 4))
         c = plan.counts
         per_shard_cond = (c.s_local_in + c.s_remote_in)
@@ -183,14 +206,13 @@ def fig2_volumes(n=1 << 16, r_nz=16, p=8):
 # Table 5: heat2d measured vs predicted
 # --------------------------------------------------------------------------
 
-def table5_heat2d(big_m=512, big_n=1024, steps=100):
+def table5_heat2d(big_m=512, big_n=1024, steps=100, smoke=False):
+    if smoke:
+        big_m, big_n, steps = 128, 256, 20
     print(f"# table5: heat2d {big_m}x{big_n}, {steps} steps, 2x4 device grid")
     hw = calibrate_host(elem_bytes=4)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    h = Heat2D(mesh, big_m, big_n, coef=0.1)
-    phi = h.init_field(0)
-    t = timeit(lambda p: h.run(p, steps), phi, iters=3, warmup=1)
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
 
     # each host device modeled as its own node (see table4 note): every
     # halo message pays the calibrated per-message tau
@@ -198,11 +220,24 @@ def table5_heat2d(big_m=512, big_n=1024, steps=100):
                           topology=Topology(8, 1))
     pred = pm.predict_heat2d(w, hw, steps=steps)
     total_pred = pred["halo"] + pred["comp"]
-    acc = min(t, total_pred) / max(t, total_pred)
-    csv_row("table5.heat2d", t * 1e6,
-            f"predicted_us={total_pred*1e6:.0f} "
-            f"(halo={pred['halo']*1e6:.0f} comp={pred['comp']*1e6:.0f}) "
-            f"accuracy={acc:.2f}")
+
+    t_base = None
+    for overlap in (False, True):
+        h = Heat2D(mesh, big_m, big_n, coef=0.1, overlap=overlap)
+        phi = h.init_field(0)
+        t = timeit(lambda p: h.run(p, steps), phi, iters=3, warmup=1)
+        if not overlap:
+            t_base = t
+            acc = min(t, total_pred) / max(t, total_pred)
+            csv_row("table5.heat2d", t * 1e6,
+                    f"predicted_us={total_pred*1e6:.0f} "
+                    f"(halo={pred['halo']*1e6:.0f} "
+                    f"comp={pred['comp']*1e6:.0f}) "
+                    f"accuracy={acc:.2f}")
+        else:
+            csv_row("table5.heat2d_overlap", t * 1e6,
+                    f"vs_base={t/t_base:.2f}x "
+                    "(interior/edge split so halo exchange can overlap)")
 
 
 # --------------------------------------------------------------------------

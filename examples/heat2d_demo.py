@@ -28,10 +28,12 @@ from repro.core.plan import Topology
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import calibrate_host  # noqa: E402
 
+from repro import compat
+
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     big_m, big_n, steps = 1024, 2048, 200
     h = Heat2D(mesh, big_m, big_n, coef=0.1)
     phi = h.init_field(0)

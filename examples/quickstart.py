@@ -16,11 +16,13 @@ from repro.core.matrix import make_mesh_like_matrix, spmv_ref_np
 from repro.core.perfmodel import ABEL, TPU_V5E, SpmvWorkload, predict_all
 from repro.core.spmv import DistributedSpMV
 
+from repro import compat
+
 
 def main():
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("data",),
+                            axis_types=compat.auto_axis_types(1))
     print(f"devices: {n_dev}")
 
     # a synthetic unstructured-mesh matrix (paper §6.1 structure)

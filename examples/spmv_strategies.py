@@ -21,13 +21,14 @@ import time
 import jax
 import numpy as np
 
+from repro import compat
 from repro.core.matrix import make_mesh_like_matrix, spmv_ref_np
 from repro.core.spmv import DistributedSpMV
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("data",),
+                            axis_types=compat.auto_axis_types(1))
     n, r_nz = 1 << 17, 16
     m = make_mesh_like_matrix(n, r_nz, locality_window=n // 64,
                               long_range_frac=0.02, seed=1)
@@ -35,7 +36,8 @@ def main():
     y_ref = spmv_ref_np(m, x_host)
 
     print(f"{'strategy':12s} {'volume(elem)':>14s} {'time/iter':>12s}")
-    for strategy in ("replicate", "blockwise", "condensed"):
+    for strategy in ("replicate", "blockwise", "condensed", "overlap",
+                     "auto"):
         eng = DistributedSpMV(m, mesh, strategy=strategy, blocksize=1024,
                               shards_per_node=4)
         x = eng.shard_vector(x_host)
@@ -50,13 +52,17 @@ def main():
         dt = (time.perf_counter() - t0) / 30
         c = eng.counts
         vol = {"replicate": 8 * (n - n // 8),
-               "blockwise": c.total_blockwise_volume(),
-               "condensed": c.total_condensed_volume()}[strategy]
-        print(f"{strategy:12s} {vol:>14,d} {dt*1e3:>9.2f} ms")
+               "blockwise": c.total_blockwise_volume()}.get(
+                   eng.strategy, c.total_condensed_volume())
+        label = strategy
+        if strategy == "auto":
+            label = f"auto->{eng.strategy}"
+        print(f"{label:12s} {vol:>14,d} {dt*1e3:>9.2f} ms")
 
     print("\npaper claim reproduced: condensed < blockwise < replicate in "
-          "communication volume; see benchmarks/run.py table3/table4 for "
-          "the modeled-vs-measured comparison.")
+          "communication volume; 'auto' lets the calibrated §5 models pick "
+          "the rung.  See benchmarks/run.py table3/table4 for the "
+          "modeled-vs-measured comparison.")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,15 @@
 """The paper's contribution: communication planning, strategies, models."""
 from repro.core.matrix import EllpackMatrix, make_mesh_like_matrix, spmv_ref_np
 from repro.core.plan import CommPlan, GatherCounts, Topology, build_comm_plan
+from repro.core.plan_cache import get_comm_plan
 from repro.core.spmv import DistributedSpMV
 from repro.core.heat2d import Heat2D
-from repro.core import perfmodel, roofline, hlo_cost, strategies
+from repro.core import (perfmodel, plan_cache, roofline, hlo_cost, strategies,
+                        tune)
 
 __all__ = [
     "EllpackMatrix", "make_mesh_like_matrix", "spmv_ref_np",
     "CommPlan", "GatherCounts", "Topology", "build_comm_plan",
-    "DistributedSpMV", "Heat2D",
-    "perfmodel", "roofline", "hlo_cost", "strategies",
+    "get_comm_plan", "DistributedSpMV", "Heat2D",
+    "perfmodel", "plan_cache", "roofline", "hlo_cost", "strategies", "tune",
 ]

@@ -25,6 +25,7 @@ from repro.core.plan import GatherCounts, Topology
 __all__ = [
     "HardwareParams", "ABEL", "TPU_V5E", "SpmvWorkload",
     "predict_v1", "predict_v2", "predict_v3", "predict_replicate",
+    "predict_overlap", "predict_all", "STRATEGY_PREDICTORS",
     "predict_heat2d", "Heat2DWorkload",
 ]
 
@@ -182,13 +183,61 @@ def predict_replicate(w: SpmvWorkload, hw: HardwareParams) -> float:
     return float(np.max(t_comp_per_thread(w, hw)) + t_comm)
 
 
+# --------------------------------------------------------------------------
+# Beyond paper: overlap — condensed exchange hidden behind own-shard compute.
+# The local step is split: the own-shard partial SpMV (which needs only
+# x_local) runs while the condensed all_to_all is in flight, then the foreign
+# partial consumes the unpacked remote values.  Two consequences for the
+# model: (a) the memput phase max-composes with the own compute instead of
+# adding to it; (b) the own-shard memcpy into x_copy (eq. 14) disappears —
+# the remote pass only ever reads exchanged values.
+# --------------------------------------------------------------------------
+
+def predict_overlap(w: SpmvWorkload, hw: HardwareParams) -> float:
+    c = w.counts
+    comp = t_comp_per_thread(w, hw)
+    parts = v3_components(w, hw)
+
+    # split compute by access counts: foreign occurrences vs all occurrences
+    foreign = (c.c_local_indv + c.c_remote_indv).astype(np.float64)
+    frac_foreign = foreign / float(max(1, w.shard_size * w.r_nz))
+    comp_own = comp * (1.0 - frac_foreign)
+    comp_foreign = comp * frac_foreign
+
+    # eq. (13) memput phase, overlapped with the own-shard partial compute
+    comm = -np.inf
+    for node in range(w.topology.num_nodes):
+        th = _threads_of_node(w.topology, node)
+        t_local = np.max(2.0 * c.s_local_out[th] * hw.elem / hw.w_private)
+        t_remote = np.sum(
+            c.c_remote_out[th] * hw.tau
+            + c.s_remote_out[th] * hw.elem / hw.w_remote
+        )
+        t_memput = np.max(parts["pack"][th]) + t_local + t_remote
+        comm = max(comm, max(t_memput, float(np.max(comp_own[th]))))
+
+    # tail: unpack + foreign partial compute (no eq. 14 own-shard copy)
+    tail = np.max(parts["unpack"] + comp_foreign)
+    return float(comm + tail)
+
+
 def predict_all(w: SpmvWorkload, hw: HardwareParams) -> dict[str, float]:
     return {
         "v1_finegrained": predict_v1(w, hw),
         "v2_blockwise": predict_v2(w, hw),
         "v3_condensed": predict_v3(w, hw),
+        "overlap": predict_overlap(w, hw),
         "replicate": predict_replicate(w, hw),
     }
+
+
+# runtime strategy name (strategies.STRATEGIES) -> §5 predictor
+STRATEGY_PREDICTORS = {
+    "replicate": predict_replicate,
+    "blockwise": predict_v2,
+    "condensed": predict_v3,
+    "overlap": predict_overlap,
+}
 
 
 def _threads_of_node(topo: Topology, node: int) -> np.ndarray:

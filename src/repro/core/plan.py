@@ -110,6 +110,19 @@ class CommPlan:
     recv_global_blk: np.ndarray    # (P, P, b_max) int32; [dst, src, j] ->
                                    # global block id; padding -> nblks (dump)
 
+    # --- overlap (own/foreign compute split) ---
+    # Per-row compaction of ``cols`` into own-shard accesses (resolvable from
+    # x_local alone, while the all_to_all is in flight) and foreign accesses
+    # (resolvable only after the condensed exchange lands).  ``*_src`` maps
+    # each compacted slot back to its original r_nz slot so the engine can
+    # split ``vals`` the same way on the host.
+    r_loc_max: int
+    r_rem_max: int
+    loc_cols: np.ndarray  # (n, r_loc_max) int32 shard-local; padding -> shard_size
+    loc_src: np.ndarray   # (n, r_loc_max) int32 original slot; padding -> 0
+    rem_cols: np.ndarray  # (n, r_rem_max) int32 global; padding -> n + 1
+    rem_src: np.ndarray   # (n, r_rem_max) int32 original slot; padding -> 0
+
     counts: GatherCounts
 
     @property
@@ -224,6 +237,35 @@ def build_comm_plan(
                 send_local_blk[s, q, :k] = bl - s * blocks_per_shard
                 recv_global_blk[q, s, :k] = bl
 
+    # ---- overlap split: compact each row's accesses into own-shard vs
+    # foreign slots (vectorized; stable order preserves the original slot
+    # sequence inside each group) ----
+    r_nz = cols.shape[1]
+    rows_shard = np.repeat(np.arange(p), shard_size)      # owning shard per row
+    is_loc = owner == rows_shard[:, None]                 # (n, r_nz)
+    loc_count = is_loc.sum(axis=1)
+    rem_count = r_nz - loc_count
+    r_loc_max = max(1, int(loc_count.max()))
+    r_rem_max = max(1, int(rem_count.max()))
+    pos = np.arange(r_nz)[None, :]
+
+    order_loc = np.argsort(~is_loc, axis=1, kind="stable")  # own slots first
+    cols_by_loc = np.take_along_axis(cols, order_loc, axis=1)
+    lvalid = pos < loc_count[:, None]
+    # padding -> shard_size: x_local is extended with one zero slot there
+    loc_cols = np.where(
+        lvalid, cols_by_loc - (rows_shard * shard_size)[:, None], shard_size
+    )[:, :r_loc_max].astype(np.int32)
+    loc_src = np.where(lvalid, order_loc, 0)[:, :r_loc_max].astype(np.int32)
+
+    order_rem = np.argsort(is_loc, axis=1, kind="stable")   # foreign first
+    cols_by_rem = np.take_along_axis(cols, order_rem, axis=1)
+    rvalid = pos < rem_count[:, None]
+    # padding -> n + 1: x_copy keeps that slot zero (n is the recv dump)
+    rem_cols = np.where(rvalid, cols_by_rem, n + 1)[:, :r_rem_max].astype(
+        np.int32)
+    rem_src = np.where(rvalid, order_rem, 0)[:, :r_rem_max].astype(np.int32)
+
     # ---- perf-model counts (§5.2) ----
     s_out_l = np.zeros(p, np.int64)
     s_out_r = np.zeros(p, np.int64)
@@ -272,5 +314,11 @@ def build_comm_plan(
         send_block_counts=send_block_counts,
         send_local_blk=send_local_blk,
         recv_global_blk=recv_global_blk,
+        r_loc_max=r_loc_max,
+        r_rem_max=r_rem_max,
+        loc_cols=loc_cols,
+        loc_src=loc_src,
+        rem_cols=rem_cols,
+        rem_src=rem_src,
         counts=counts,
     )

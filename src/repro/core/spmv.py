@@ -1,15 +1,27 @@
 """Distributed SpMV engine — the paper's workload as a composable JAX module.
 
 ``DistributedSpMV`` owns: the row partitioning, the one-time ``CommPlan``
-(paper §4.3.1), the sharded matrix residency, and a jitted
-``shard_map`` step that fuses gather (strategy-pluggable) + local EllPack
-compute.  The local compute can run through the Pallas kernel
-(``use_kernel=True``) or the pure-jnp reference.
+(paper §4.3.1, persistently cached through ``plan_cache``), the sharded
+matrix residency, and a jitted ``shard_map`` step that fuses gather
+(strategy-pluggable) + local EllPack compute.  The local compute can run
+through the Pallas kernel (``use_kernel=True``) or the pure-jnp reference.
+
+``strategy`` may be any rung of the ladder (``replicate`` / ``blockwise`` /
+``condensed`` / ``overlap``) or ``"auto"``, which micro-benchmarks the
+hardware parameters once per mesh and lets the §5 performance models pick
+(``core.tune``).  The resolved choice is available as ``engine.strategy``;
+the request is kept in ``engine.requested_strategy``.
+
+The ``overlap`` strategy issues the condensed ``all_to_all`` first, runs the
+own-shard partial SpMV (which depends only on ``x_local``) while the exchange
+is in flight, then finishes with the foreign partial on the unpacked remote
+values — XLA's latency-hiding scheduler can hide the collective behind the
+first partial.  It also skips the eq.-14 own-shard copy into ``x_copy``.
 
 Usage:
     mesh = jax.make_mesh((8,), ("data",))
     m = make_mesh_like_matrix(1 << 16, 16)
-    engine = DistributedSpMV(m, mesh, strategy="condensed")
+    engine = DistributedSpMV(m, mesh, strategy="auto")
     x = engine.shard_vector(x_host)
     y = engine(x)              # y = (D + A) x, sharded like x
 """
@@ -22,8 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.matrix import EllpackMatrix
-from repro.core.plan import CommPlan, Topology, build_comm_plan
+from repro.core.plan import CommPlan, Topology
+from repro.core import plan_cache
 from repro.core import strategies as strat
 
 __all__ = ["DistributedSpMV"]
@@ -51,27 +65,55 @@ class DistributedSpMV:
         blocksize: int | None = None,
         shards_per_node: int | None = None,
         use_kernel: bool = False,
+        hw=None,
+        use_plan_cache: bool = True,
     ):
-        if strategy not in strat.STRATEGIES:
-            raise ValueError(f"strategy must be one of {strat.STRATEGIES}")
+        valid = strat.STRATEGIES + ("auto",)
+        if strategy not in valid:
+            raise ValueError(f"strategy must be one of {valid}")
         self.matrix = matrix
         self.mesh = mesh
         self.axis_name = axis_name
-        self.strategy = strategy
         p = int(np.prod([mesh.shape[axis_name]]))
         self.p = p
         n = matrix.n
         assert n % p == 0, "pad the matrix so n divides the mesh axis"
         topology = Topology(p, shards_per_node or p)
-        self.plan: CommPlan = build_comm_plan(
-            matrix.cols, n, p, blocksize=blocksize, topology=topology
+        self.plan: CommPlan = plan_cache.get_comm_plan(
+            matrix.cols, n, p, blocksize=blocksize, topology=topology,
+            cache=use_plan_cache,
         )
+
+        self.requested_strategy = strategy
+        self.predicted_times: dict[str, float] | None = None
+        if strategy == "auto":
+            from repro.core import tune
+            if hw is None:
+                hw = tune.measure_hardware(mesh, axis_name)
+            candidates = None
+            if use_kernel:  # kernel path consumes a full x_copy
+                candidates = tuple(s for s in strat.STRATEGIES
+                                   if s != "overlap")
+            ranked = tune.rank_strategies(self.plan, matrix.r_nz, hw,
+                                          candidates=candidates)
+            self.predicted_times = dict(ranked)
+            strategy = ranked[0][0]
+        self.strategy = strategy
+        if use_kernel and strategy == "overlap":
+            raise ValueError(
+                "overlap splits the local compute and bypasses x_copy; "
+                "it does not compose with use_kernel yet")
 
         shard = NamedSharding(mesh, P(axis_name))
         shard2 = NamedSharding(mesh, P(axis_name, None))
         self._diag = jax.device_put(matrix.diag, shard)
-        self._vals = jax.device_put(matrix.vals, shard2)
-        self._cols = jax.device_put(matrix.cols, shard2)
+        if strategy == "overlap":
+            # the overlap step never reads the unsplit matrix; keeping
+            # vals/cols resident would double the device footprint
+            self._vals = self._cols = None
+        else:
+            self._vals = jax.device_put(matrix.vals, shard2)
+            self._cols = jax.device_put(matrix.cols, shard2)
         self._gather_args = tuple(
             jax.device_put(a, NamedSharding(mesh, P(axis_name)))
             for a in strat.plan_device_args(self.plan, strategy)
@@ -81,7 +123,39 @@ class DistributedSpMV:
         gather_local = strat.make_gather_local(self.plan, strategy, axis_name)
         shard_size = self.plan.shard_size
 
-        if use_kernel:
+        if strategy == "overlap":
+            plan = self.plan
+            # split vals the same way the plan split cols; padded slots point
+            # at a guaranteed-zero x slot, so their vals are never observed
+            loc_vals = np.take_along_axis(matrix.vals, plan.loc_src, axis=1)
+            rem_vals = np.take_along_axis(matrix.vals, plan.rem_src, axis=1)
+            self._plan_args = self._gather_args + tuple(
+                jax.device_put(a, shard2)
+                for a in (plan.loc_cols, loc_vals, plan.rem_cols, rem_vals)
+            )
+
+            def step_local(x_local, diag_l, send_idx,
+                           recv_idx, loc_cols_l, loc_vals_l, rem_cols_l,
+                           rem_vals_l):
+                # 1. issue the condensed exchange (paper Listing 5 pack)
+                buf = x_local[send_idx[0]]
+                recv = jax.lax.all_to_all(
+                    buf, axis_name, split_axis=0, concat_axis=0, tiled=True)
+                # 2. own-shard partial: no dependency on `recv`, so the
+                # scheduler can run it while the collective is in flight
+                x_ext = jnp.concatenate(
+                    [x_local, jnp.zeros((1,), x_local.dtype)])
+                y_own = diag_l * x_local + (
+                    loc_vals_l * x_ext[loc_cols_l]).sum(axis=-1)
+                # 3. foreign partial on the landed remote values; slot n is
+                # the recv padding dump, slot n+1 the compute padding (zero)
+                x_copy = jnp.zeros((n + 2,), x_local.dtype)
+                x_copy = x_copy.at[recv_idx[0].ravel()].set(recv.ravel())
+                y_rem = (rem_vals_l * x_copy[rem_cols_l]).sum(axis=-1)
+                return y_own + y_rem
+
+            kernel_specs = (P(axis_name, None),) * 4
+        elif use_kernel:
             from repro.kernels import ops as kops
             kernel_local, kplan = kops.make_spmv_on_copy_sharded(
                 matrix.cols, p
@@ -110,25 +184,31 @@ class DistributedSpMV:
 
             kernel_specs = ()
 
-        in_specs = (
-            P(axis_name), P(axis_name), P(axis_name, None), P(axis_name, None),
-        ) + strat.gather_in_specs(strategy, axis_name) + kernel_specs
-        mapped = jax.shard_map(
+        if strategy == "overlap":
+            base_args = (self._diag,)
+            base_specs = (P(axis_name), P(axis_name))
+        else:
+            base_args = (self._diag, self._vals, self._cols)
+            base_specs = (P(axis_name), P(axis_name), P(axis_name, None),
+                          P(axis_name, None))
+        in_specs = (base_specs
+                    + strat.gather_in_specs(strategy, axis_name)
+                    + kernel_specs)
+        mapped = compat.shard_map(
             step_local, mesh=mesh, in_specs=in_specs, out_specs=P(axis_name),
             check_vma=False,  # pallas_call inside shard_map needs this
         )
 
         @jax.jit
         def step(x):
-            return mapped(x, self._diag, self._vals, self._cols,
-                          *self._plan_args)
+            return mapped(x, *base_args, *self._plan_args)
 
         self._step = step
 
         def gather_only_local(x_local, *plan_args):
             return gather_local(x_local, *plan_args)[None]
 
-        self._gather_only = jax.jit(jax.shard_map(
+        self._gather_only = jax.jit(compat.shard_map(
             gather_only_local,
             mesh=mesh,
             in_specs=(P(axis_name),) + strat.gather_in_specs(strategy, axis_name),

@@ -16,6 +16,10 @@ Strategies (paper §4):
     element, via a padded block all_to_all (volume = needed blocks × BS).
   * ``condensed`` — UPCv3: pack exactly the unique needed values, one padded
     message per pair, single all_to_all, scatter-unpack (volume = Σ unique).
+  * ``overlap``   — beyond paper: same condensed exchange, but the consumer
+    splits its compute so the own-shard partial runs while the all_to_all is
+    in flight (see ``spmv.DistributedSpMV``); as a pure gather it is
+    identical to ``condensed``.
 """
 from __future__ import annotations
 
@@ -108,7 +112,7 @@ def plan_device_args(plan: CommPlan, strategy: str) -> tuple[Any, ...]:
     shard_map with ``gather_in_specs`` so every device holds only its slice."""
     if strategy == "replicate":
         return ()
-    if strategy == "condensed":
+    if strategy in ("condensed", "overlap"):
         return (plan.send_local_idx, plan.recv_global_idx)
     if strategy == "blockwise":
         return (plan.send_local_blk, plan.recv_global_blk)
@@ -127,7 +131,7 @@ def make_gather_local(plan: CommPlan, strategy: str, axis_name: str):
     """Returns local_fn(x_local, *plan_args) -> x_copy (len >= n)."""
     if strategy == "replicate":
         return functools.partial(replicate_gather_local, axis_name=axis_name)
-    if strategy == "condensed":
+    if strategy in ("condensed", "overlap"):
         return functools.partial(
             condensed_gather_local,
             axis_name=axis_name,
@@ -145,4 +149,4 @@ def make_gather_local(plan: CommPlan, strategy: str, axis_name: str):
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
-STRATEGIES = ("replicate", "blockwise", "condensed")
+STRATEGIES = ("replicate", "blockwise", "condensed", "overlap")

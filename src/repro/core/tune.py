@@ -1,0 +1,169 @@
+"""Model-driven strategy autotuning (closing the paper's §5 loop).
+
+The paper's performance models are quantitative enough to *predict* which
+communication strategy wins for a given access pattern and topology — this
+module closes that loop so ``DistributedSpMV(..., strategy="auto")`` needs no
+hand-picked strategy:
+
+1. ``measure_hardware`` micro-benchmarks the paper's hardware characteristic
+   parameters (§5.4 / §6.2) ONCE PER MESH — a STREAM-like copy for
+   ``w_private``, a large ring ``ppermute`` for ``w_remote``, a tiny one for
+   ``tau``, and a random-gather probe for the effective non-contiguous access
+   granularity ``cacheline`` (the per-element pack/unpack cost).  Results are
+   memoized per (devices, axis) for the life of the process.
+2. ``rank_strategies`` feeds the exact ``CommPlan`` volume counts through the
+   §5 formulas (``perfmodel.STRATEGY_PREDICTORS``) and sorts.
+3. ``choose_strategy`` returns the predicted-fastest runnable strategy.
+
+Every ranking is pure arithmetic over already-counted volumes: autotuning
+costs four closed-form evaluations plus a one-time ~100 ms calibration.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.perfmodel import (
+    HardwareParams, SpmvWorkload, STRATEGY_PREDICTORS,
+)
+from repro.core.plan import CommPlan
+
+__all__ = [
+    "measure_hardware", "rank_strategies", "choose_strategy",
+    "clear_hardware_cache", "workload_from_plan",
+]
+
+_hw_cache: dict[tuple, HardwareParams] = {}
+
+
+def clear_hardware_cache() -> None:
+    _hw_cache.clear()
+
+
+def _timeit(fn, *args, iters: int = 10, warmup: int = 3) -> float:
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def measure_hardware(
+    mesh=None,
+    axis_name: str | None = None,
+    *,
+    elem_bytes: int = 4,
+    force: bool = False,
+) -> HardwareParams:
+    """Micro-benchmark the four §5.4 parameters on this process's devices.
+
+    ``mesh``/``axis_name`` select the communication axis to probe; with no
+    mesh every visible device joins a ring.  Memoized per (device set, axis,
+    elem size) — pass ``force=True`` to re-measure.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import compat
+
+    if mesh is not None:
+        axis = axis_name or mesh.axis_names[0]
+        devices = tuple(d.id for d in mesh.devices.flat)
+        ndev = mesh.shape[axis]
+    else:
+        axis = axis_name or "data"
+        devices = tuple(d.id for d in jax.devices())
+        ndev = len(devices)
+    key = (devices, axis, ndev, elem_bytes)
+    if not force and key in _hw_cache:
+        return _hw_cache[key]
+
+    # -- w_private: STREAM-like copy (read + write) --
+    n = 1 << 22
+    x = jnp.arange(n, dtype=jnp.float32)
+    copy = jax.jit(lambda a: a * 1.0000001)
+    t_copy = _timeit(copy, x, iters=10)
+    w_private = 2.0 * n * 4 / t_copy
+
+    # -- cacheline: random-gather probe; the model charges every
+    # non-contiguous local access one ``cacheline`` of traffic, so the
+    # effective value is gather-time * w_private / accesses --
+    g = 1 << 20
+    idx = jnp.asarray(
+        np.random.default_rng(0).integers(0, n, size=g, dtype=np.int32))
+    gather = jax.jit(lambda a, i: a[i])
+    t_gather = _timeit(gather, x, idx, iters=10)
+    cacheline = int(np.clip(t_gather * w_private / g, 16, 4096))
+
+    # -- w_remote and tau: ring ppermute, big minus tiny --
+    if ndev > 1:
+        ring_mesh = mesh
+        if ring_mesh is None:
+            ring_mesh = compat.make_mesh(
+                (ndev,), (axis,), axis_types=compat.auto_axis_types(1))
+        perm = [(i, (i + 1) % ndev) for i in range(ndev)]
+
+        def ring(a):
+            return compat.shard_map(
+                lambda v: jax.lax.ppermute(v, axis, perm), mesh=ring_mesh,
+                in_specs=P(axis), out_specs=P(axis))(a)
+
+        sh = NamedSharding(ring_mesh, P(axis))
+        big = jax.device_put(jnp.zeros((ndev * (1 << 20),), jnp.float32), sh)
+        t_big = _timeit(jax.jit(ring), big, iters=5)
+        tiny = jax.device_put(jnp.zeros((ndev * 8,), jnp.float32), sh)
+        tau = _timeit(jax.jit(ring), tiny, iters=20)
+        w_remote = (1 << 20) * 4 / max(t_big - tau, 1e-9)
+    else:
+        w_remote = w_private
+        tau = _timeit(copy, jnp.zeros((8,), jnp.float32), iters=30)
+
+    hw = HardwareParams(
+        w_private=w_private, w_remote=w_remote, tau=tau,
+        cacheline=cacheline, elem=elem_bytes, idx=4)
+    _hw_cache[key] = hw
+    return hw
+
+
+def workload_from_plan(plan: CommPlan, r_nz: int) -> SpmvWorkload:
+    return SpmvWorkload(
+        n=plan.n, r_nz=r_nz, p=plan.p, blocksize=plan.blocksize,
+        topology=plan.topology, counts=plan.counts)
+
+
+def rank_strategies(
+    plan: CommPlan,
+    r_nz: int,
+    hw: HardwareParams,
+    *,
+    candidates=None,
+) -> list[tuple[str, float]]:
+    """[(strategy, predicted_seconds)] sorted fastest-first (§5 formulas)."""
+    w = workload_from_plan(plan, r_nz)
+    names = tuple(candidates) if candidates else tuple(STRATEGY_PREDICTORS)
+    ranked = [(name, float(STRATEGY_PREDICTORS[name](w, hw)))
+              for name in names]
+    ranked.sort(key=lambda kv: kv[1])
+    return ranked
+
+
+def choose_strategy(
+    plan: CommPlan,
+    r_nz: int,
+    *,
+    hw: HardwareParams | None = None,
+    mesh=None,
+    axis_name: str | None = None,
+    candidates=None,
+) -> str:
+    """Predicted-fastest strategy for this plan on this hardware."""
+    if hw is None:
+        hw = measure_hardware(mesh, axis_name)
+    return rank_strategies(plan, r_nz, hw, candidates=candidates)[0][0]

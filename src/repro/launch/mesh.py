@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
@@ -15,8 +17,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(
+        shape, axes, axis_types=compat.auto_axis_types(len(axes)))
 
 
 def make_local_mesh(shape=None, axes=None):
@@ -26,5 +28,5 @@ def make_local_mesh(shape=None, axes=None):
         shape = (n,) if n == 1 else (2, n // 2)
     if axes is None:
         axes = ("data",) if len(shape) == 1 else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(
+        shape, axes, axis_types=compat.auto_axis_types(len(axes)))

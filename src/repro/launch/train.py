@@ -55,8 +55,9 @@ def make_mesh(spec: str):
         return make_production_mesh(multi_pod=True)
     dims = tuple(int(d) for d in spec.split("x"))
     axes = ("data", "model")[: len(dims)]
-    return jax.make_mesh(dims, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    from repro import compat
+    return compat.make_mesh(dims, axes,
+                            axis_types=compat.auto_axis_types(len(dims)))
 
 
 def main(argv=None):

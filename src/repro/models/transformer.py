@@ -436,7 +436,8 @@ class Model:
 
     def _scan_body(self, x, layer_p, *, kv_ctx=None):
         if self.ctx.scan_barrier:
-            x = jax.lax.optimization_barrier(x)
+            from repro import compat
+            x = compat.optimization_barrier(x)
         return _block_fwd(layer_p, x, self.cfg, self.ctx, kind=self.kind,
                           kv_ctx=kv_ctx), None
 

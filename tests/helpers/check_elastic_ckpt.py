@@ -16,11 +16,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import manager as ckpt
 
+from repro import compat
+
 
 def main():
     tmp = tempfile.mkdtemp()
-    mesh_a = jax.make_mesh((8,), ("data",),
-                           axis_types=(jax.sharding.AxisType.Auto,))
+    mesh_a = compat.make_mesh((8,), ("data",),
+                              axis_types=compat.auto_axis_types(1))
     tree = {
         "w": jax.device_put(np.arange(64.0).reshape(8, 8),
                             NamedSharding(mesh_a, P("data", None))),
@@ -29,8 +31,8 @@ def main():
     }
     ckpt.save(tmp, 3, tree)
 
-    mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = compat.make_mesh((2, 4), ("data", "model"),
+                              axis_types=compat.auto_axis_types(2))
     shardings = {
         "w": NamedSharding(mesh_b, P("model", "data")),
         "b": NamedSharding(mesh_b, P(("data", "model"))),

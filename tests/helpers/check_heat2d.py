@@ -8,12 +8,15 @@ import numpy as np
 
 from repro.core.heat2d import Heat2D
 
+from repro import compat
+
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    for use_kernel in (False, True):
-        h = Heat2D(mesh, 32, 64, coef=0.07, use_kernel=use_kernel)
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    for use_kernel, overlap in ((False, False), (True, False), (False, True)):
+        h = Heat2D(mesh, 32, 64, coef=0.07, use_kernel=use_kernel,
+                   overlap=overlap)
         phi0 = h.init_field(3)
         got = np.asarray(h.run(phi0, 7))
         want = h.reference(np.asarray(phi0), 7, coef=0.07)

@@ -24,7 +24,7 @@ def main():
     x = rng.standard_normal(n).astype(np.float32)
     y_ref = spmv_ref_np(m, x)
 
-    for strategy in ("replicate", "blockwise", "condensed"):
+    for strategy in ("replicate", "blockwise", "condensed", "overlap"):
         for bs in (64, 512):
             eng = DistributedSpMV(m, mesh, strategy=strategy, blocksize=bs,
                                   shards_per_node=4)
@@ -50,6 +50,15 @@ def main():
     c = eng.counts
     own = eng.plan.shard_size * 8  # blockwise includes own-shard copies
     assert c.total_condensed_volume() <= c.total_blockwise_volume() - own <= 8 * n
+
+    # auto: resolves to a concrete runnable rung and matches the reference
+    eng = DistributedSpMV(m, mesh, strategy="auto", blocksize=64,
+                          shards_per_node=4)
+    assert eng.requested_strategy == "auto"
+    assert eng.strategy in ("replicate", "blockwise", "condensed", "overlap")
+    y = np.asarray(eng(eng.shard_vector(x)))
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=2e-5)
+    print(f"AUTO_OK strategy={eng.strategy} predicted={eng.predicted_times}")
     print("ALL_STRATEGIES_OK")
 
 

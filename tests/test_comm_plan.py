@@ -11,6 +11,10 @@ Invariants:
 """
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based planner tests need the 'hypothesis' extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.matrix import make_mesh_like_matrix

@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess e2e: non-blocking CI job
+
 HELPERS = os.path.join(os.path.dirname(__file__), "helpers")
 SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
 

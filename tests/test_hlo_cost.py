@@ -63,7 +63,10 @@ def test_xla_cost_analysis_undercounts_scans():
     cost = c.cost_analysis()
     if isinstance(cost, list):
         cost = cost[0]
-    assert cost["flops"] == 2 * 128 * 256 * 256  # one iteration only
+    # one iteration only (within 1%: some XLA versions add a few bookkeeping
+    # flops), i.e. 10x below the true trip-count cost
+    one_iter = 2 * 128 * 256 * 256
+    assert one_iter <= cost["flops"] <= 1.01 * one_iter
 
 
 def test_bytes_proxy_counts_dot_operands():

@@ -8,6 +8,8 @@ import pytest
 from repro.launch import train as T
 from repro.launch import serve as S
 
+pytestmark = pytest.mark.slow  # full train/serve loops: non-blocking CI job
+
 
 def test_train_loss_decreases(tmp_path):
     # small reduced dense arch, enough steps to see learning
