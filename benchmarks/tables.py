@@ -137,6 +137,69 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50, smoke=False):
                 f"v2={t['v2_blockwise']*1000:.2f}s "
                 f"v3={t['v3_condensed']*1000:.2f}s "
                 f"overlap={t['overlap']*1000:.2f}s per-1000")
+
+    table3_moe_dispatch(smoke=smoke, iters=iters)
+    return results
+
+
+# --------------------------------------------------------------------------
+# Table 3b: the MoE-dispatch consumer — the same ladder on the token→expert
+# gather, measured on 8 host devices with §5 predicted-vs-measured
+# --------------------------------------------------------------------------
+
+def table3_moe_dispatch(n_tok=1 << 14, d=32, smoke=False, iters=50):
+    from repro.comm import select
+    from repro.core import tune
+    from repro.models.moe import (MoEDispatchGather, moe_dispatch_pattern,
+                                  moe_dispatch_ref)
+
+    if smoke:
+        n_tok, d, iters = 1 << 12, 8, 5
+    k, e_total = 2, 32
+    cap = int(1.25 * n_tok * k / e_total)
+    print(f"# table3 moe_dispatch: token->expert gather ladder "
+          f"(tokens={n_tok}, d={d}, experts={e_total}, capacity={cap})")
+    mesh = _mesh8()
+    rng = np.random.default_rng(3)
+    # zipf-skewed routing: experts differ in load, like trained routers
+    weights = 1.0 / np.arange(1, e_total + 1)
+    weights /= weights.sum()
+    top_e = rng.choice(e_total, size=(n_tok, k), p=weights)
+    x_host = rng.standard_normal((n_tok, d)).astype(np.float32)
+    idx, valid = moe_dispatch_pattern(top_e, n_tok, e_total, cap, 8)
+    ref = moe_dispatch_ref(x_host, idx, valid, e_total, cap)
+
+    # price with the host's measured parameters, feature width folded into
+    # the element size (every moved "element" is one d-wide token vector)
+    hw = tune.measure_hardware(mesh, "data").replace(elem=4 * d)
+    preds = None
+    results = {}
+    for strategy in ("replicate", "blockwise", "condensed", "overlap",
+                     "auto"):
+        g = MoEDispatchGather(top_e, n_tok, e_total, cap, mesh,
+                              strategy=strategy, blocksize=n_tok // 8 // 16,
+                              shards_per_node=1, hw=hw)
+        if preds is None:
+            preds = dict(select.rank_strategies(g.plan, 1, hw))
+        x = g.shard_tokens(x_host)
+        np.testing.assert_array_equal(np.asarray(g(x)), ref)
+        t = timeit(g, x, iters=iters)
+        results[strategy] = t
+        if strategy == "auto":
+            best_fixed = min(v for s, v in results.items() if s != "auto")
+            csv_row("table3.moe_dispatch.auto", t * 1e6,
+                    f"resolved={g.strategy} "
+                    f"vs_best_fixed={t/best_fixed:.2f}x")
+        else:
+            t_pred = preds[strategy]
+            acc = min(t, t_pred) / max(t, t_pred)
+            c = g.counts
+            vol = {"replicate": 8 * n_tok,
+                   "blockwise": c.total_blockwise_volume()}.get(
+                       strategy, c.total_condensed_volume())
+            csv_row(f"table3.moe_dispatch.{strategy}", t * 1e6,
+                    f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
+                    f"vol_elems={vol}")
     return results
 
 

@@ -1,0 +1,30 @@
+"""repro.comm — the paper's irregular-communication runtime, workload-agnostic.
+
+The optimization unit is an ``AccessPattern`` (which global elements of a
+``SharedVector`` does each accessor touch), not any one workload.
+``IrregularGather`` is the single front door: it plans once (§4.3.1,
+persistently cached), picks a ladder rung (§4) by hand or by the §5 models
+(``strategy="auto"``, ``blocksize="auto"``), and exposes both a standalone
+gather and ``shard_map``-local functions — including the ``OverlapHandle``
+start/compute/finish protocol that generalizes the own/foreign split.
+
+Consumers: ``repro.core.spmv`` (the paper's workload), ``repro.core.heat2d``
+(§8 stencil halos), ``repro.models.moe`` (token→expert dispatch).
+"""
+from repro.comm.pattern import AccessPattern
+from repro.comm.shared import SharedVector
+from repro.comm.plan import (CommPlan, GatherCounts, Topology,
+                             build_comm_plan, blockwise_block_counts)
+from repro.comm.plan_cache import get_comm_plan
+from repro.comm.strategies import STRATEGIES
+from repro.comm.gather import IrregularGather, OverlapHandle
+from repro.comm import plan, plan_cache, pattern, shared, strategies, select
+from repro.comm import gather
+
+__all__ = [
+    "AccessPattern", "SharedVector", "IrregularGather", "OverlapHandle",
+    "CommPlan", "GatherCounts", "Topology", "build_comm_plan",
+    "blockwise_block_counts", "get_comm_plan", "STRATEGIES",
+    "plan", "plan_cache", "pattern", "shared", "strategies", "select",
+    "gather",
+]

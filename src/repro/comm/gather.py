@@ -1,0 +1,196 @@
+"""IrregularGather — the single front door to the strategy ladder.
+
+One object owns everything the paper's §4 machinery needs for one access
+pattern on one mesh: the one-time ``CommPlan`` (persistently cached), the
+resolved strategy (any ladder rung or ``"auto"`` via the §5 models), the
+device-resident plan arrays, and the ``shard_map``-local gather functions.
+
+Consumers compose it two ways:
+
+* standalone: ``x_copy_all = gather(x)`` returns every device's private copy
+  stacked (row q = device q's ``mythread_x_copy``) — convenient for tests
+  and simple pipelines;
+* fused: the consumer threads ``gather.plan_args`` through its own
+  ``shard_map`` (as operands, with ``gather.in_specs`` — each device must
+  see only its slice) and calls ``gather.local(x_local, *plan_args_l)``
+  inside — or, to hide the exchange behind own-shard compute (the
+  generalized own/foreign split of the ``overlap`` rung), the
+  ``OverlapHandle`` protocol::
+
+      def step_local(x_local, *plan_args_l):
+          handle = gather.start_local(x_local, *plan_args_l)  # issued
+          y_own = ...                           # depends on x_local only
+          x_copy = handle.finish()              # unpack landed messages
+          return y_own + foreign_part(x_copy)
+
+      mapped = shard_map(step_local, mesh=mesh,
+                         in_specs=(P(axis),) + gather.in_specs, ...)
+      y = jax.jit(lambda x: mapped(x, *gather.plan_args))(x)
+
+  XLA's latency-hiding scheduler overlaps the collective with everything
+  scheduled between ``start_local`` and ``finish`` that does not consume the
+  collective's result.
+
+The shared vector may carry trailing feature dimensions (token embeddings,
+stacked right-hand sides): strategies move whole feature rows and all §5
+volumes scale by the feature width.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.comm import plan_cache
+from repro.comm import select
+from repro.comm import strategies as strat
+from repro.comm.pattern import AccessPattern
+from repro.comm.plan import CommPlan, Topology
+from repro.comm.shared import SharedVector, axis_size
+
+__all__ = ["IrregularGather", "OverlapHandle"]
+
+
+@dataclasses.dataclass
+class OverlapHandle:
+    """An in-flight gather: the collective has been issued, the private copy
+    is not yet assembled.  Everything computed before ``finish`` that only
+    reads ``x_local`` runs inside the communication window."""
+
+    x_local: jax.Array
+    _finish: Callable[..., jax.Array]
+
+    def finish(self, *, extra_slots: int = 0,
+               copy_own: bool = True) -> jax.Array:
+        """Assemble x_copy from the landed messages.
+
+        ``extra_slots``: number of guaranteed-zero slots appended after the
+        recv dump — x_copy[n+1 .. n+extra_slots] read as 0 for any strategy,
+        so consumers can point their padding indices there.
+        ``copy_own=False`` skips the eq.-14 own-shard memcpy for consumers
+        that read their own shard from ``x_local`` directly.
+        """
+        return self._finish(extra_slots=extra_slots, copy_own=copy_own)
+
+
+def _measure_hw(mesh, axis_name):
+    from repro.core import tune
+    if isinstance(axis_name, (tuple, list)):
+        # multi-axis gather: calibrate over the whole visible device set
+        # (the parameters describe the machine, not the mesh factorization)
+        return tune.measure_hardware()
+    return tune.measure_hardware(mesh, axis_name)
+
+
+class IrregularGather:
+    """Plan + strategy + device state for gathering one ``AccessPattern``
+    over one mesh axis (or tuple of axes)."""
+
+    def __init__(
+        self,
+        pattern: AccessPattern,
+        where: jax.sharding.Mesh | SharedVector,
+        *,
+        axis_name: str | tuple = "data",
+        strategy: str = "auto",
+        blocksize: int | str | None = None,
+        shards_per_node: int | None = None,
+        topology: Topology | None = None,
+        hw=None,
+        candidates=None,
+        use_plan_cache: bool = True,
+    ):
+        if isinstance(where, SharedVector):
+            assert where.n == pattern.n, (where.n, pattern.n)
+            mesh = where.mesh
+            axis_name = where.axis_name
+            topology = topology or where.topology
+        else:
+            mesh = where
+        valid = strat.STRATEGIES + ("auto",)
+        if strategy not in valid:
+            raise ValueError(f"strategy must be one of {valid}")
+        self.pattern = pattern
+        self.mesh = mesh
+        self.axis_name = axis_name
+        p = axis_size(mesh, axis_name)
+        self.p = p
+        n = pattern.n
+        assert n % p == 0, "pad the vector so n divides the mesh axis"
+        assert pattern.m % p == 0, "pad the pattern so m divides the mesh axis"
+        if topology is None:
+            topology = Topology(p, shards_per_node or p)
+
+        if blocksize == "auto":
+            if hw is None:
+                hw = _measure_hw(mesh, axis_name)
+            blocksize = select.choose_blocksize(
+                pattern.indices, n, p, topology=topology, hw=hw)
+        self.plan: CommPlan = plan_cache.get_comm_plan(
+            pattern.indices, n, p, blocksize=blocksize, topology=topology,
+            cache=use_plan_cache,
+        )
+
+        self.requested_strategy = strategy
+        self.predicted_times: dict[str, float] | None = None
+        if strategy == "auto":
+            if hw is None:
+                hw = _measure_hw(mesh, axis_name)
+            ranked = select.rank_strategies(self.plan, pattern.r, hw,
+                                            candidates=candidates)
+            self.predicted_times = dict(ranked)
+            strategy = ranked[0][0]
+        self.strategy = strategy
+        self.hw = hw
+
+        shard = NamedSharding(mesh, P(axis_name))
+        self.in_specs = strat.gather_in_specs(strategy, axis_name)
+        self.plan_args = tuple(
+            jax.device_put(a, shard)
+            for a in strat.plan_device_args(self.plan, strategy)
+        )
+        self._local = strat.make_gather_local(self.plan, strategy, axis_name)
+        self._start, self._finish = strat.make_start_local(
+            self.plan, strategy, axis_name)
+
+        def gather_only_local(x_local, *plan_args):
+            return self._local(x_local, *plan_args)[None]
+
+        self._gather_all = jax.jit(compat.shard_map(
+            gather_only_local,
+            mesh=mesh,
+            in_specs=(P(axis_name),) + self.in_specs,
+            out_specs=P(axis_name),
+            check_vma=False,
+        ))
+
+    # ---- shard_map-local surface (compose inside a consumer's step) ----
+    def local(self, x_local: jax.Array, *plan_args) -> jax.Array:
+        """One-shot local gather: x_local (shard, ...) -> x_copy (>=n, ...)."""
+        return self._local(x_local, *plan_args)
+
+    def start_local(self, x_local: jax.Array, *plan_args) -> OverlapHandle:
+        """Issue the exchange; compute on ``x_local`` while it flies."""
+        in_flight = self._start(x_local, *plan_args)
+
+        def finish(*, extra_slots=0, copy_own=True):
+            return self._finish(in_flight, x_local, *plan_args,
+                                extra_slots=extra_slots, copy_own=copy_own)
+
+        return OverlapHandle(x_local=x_local, _finish=finish)
+
+    # ---- standalone surface ----
+    def shard_vector(self, x) -> jax.Array:
+        return jax.device_put(
+            x, NamedSharding(self.mesh, P(self.axis_name)))
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """(P, >=n, ...) array: row q is device q's private x_copy."""
+        return self._gather_all(x, *self.plan_args)
+
+    @property
+    def counts(self):
+        return self.plan.counts

@@ -1,0 +1,101 @@
+"""AccessPattern — the optimization unit of the paper, workload-agnostic.
+
+The paper's ladder optimizes *an index set*, not a workload: which global
+elements of a shared vector does each accessor touch?  SpMV's EllPack ``J``
+is one such set; a stencil's halo neighborhood and a router's token→expert
+assignment are others.  ``AccessPattern`` captures exactly that set (plus the
+two partitioning facts the planner needs: vector length ``n`` and accessor
+count ``m``) so every consumer feeds the same planner, the same strategies,
+and the same §5 models.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["AccessPattern"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AccessPattern:
+    """A static set of global indices read by each of ``m`` accessor rows.
+
+    ``indices``: (m, r) int32, values in [0, n).  Accessor rows and vector
+    elements are partitioned contiguously over the same shards: shard q of p
+    owns vector slice [q*n/p, (q+1)*n/p) and accessor rows
+    [q*m/p, (q+1)*m/p).  Rows needing fewer than r indices pad with an
+    *owned* index (e.g. the row's own element) — owned accesses cost nothing.
+    """
+
+    indices: np.ndarray
+    n: int
+
+    def __post_init__(self):
+        idx = np.asarray(self.indices)
+        assert idx.ndim == 2, f"indices must be (m, r), got {idx.shape}"
+        assert idx.dtype == np.int32, "indices must be int32"
+
+    @property
+    def m(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def r(self) -> int:
+        return self.indices.shape[1]
+
+    @classmethod
+    def from_indices(cls, idx, n: int | None = None) -> "AccessPattern":
+        """Any global index set: (m,) or (m, r) integers into a length-n
+        vector.  ``n`` defaults to max(idx)+1 (pad upstream so n % p == 0)."""
+        idx = np.asarray(idx)
+        if idx.ndim == 1:
+            idx = idx[:, None]
+        if n is None:
+            n = int(idx.max()) + 1
+        assert idx.min() >= 0 and idx.max() < n, (
+            f"indices must lie in [0, {n})")
+        return cls(indices=np.ascontiguousarray(idx, dtype=np.int32), n=n)
+
+    @classmethod
+    def from_ellpack(cls, matrix) -> "AccessPattern":
+        """The SpMV instance: row i accesses x[J[i, :]] (m == n)."""
+        return cls.from_indices(matrix.cols, n=matrix.n)
+
+    @classmethod
+    def from_stencil5(cls, big_m: int, big_n: int, mprocs: int,
+                      nprocs: int) -> "AccessPattern":
+        """5-point stencil neighbors over an (mprocs × nprocs) tile grid.
+
+        The field is flattened *tile-major*: rank r = ip*nprocs + kp owns the
+        contiguous slice [r*tile, (r+1)*tile) holding its (m_loc × n_loc)
+        tile row-major — exactly the SharedVector contiguous-ownership
+        layout.  Each cell's pattern row holds its four neighbors' global
+        ids; out-of-domain neighbors pad with the cell's own id (an owned,
+        zero-cost access; the solver masks the global boundary anyway).
+        """
+        assert big_m % mprocs == 0 and big_n % nprocs == 0
+        m_loc, n_loc = big_m // mprocs, big_n // nprocs
+        tile = m_loc * n_loc
+
+        def gid(gi, gk):
+            """Global row/col -> tile-major global id (arrays ok)."""
+            ip, i = gi // m_loc, gi % m_loc
+            kp, k = gk // n_loc, gk % n_loc
+            return (ip * nprocs + kp) * tile + i * n_loc + k
+
+        gi, gk = np.meshgrid(np.arange(big_m), np.arange(big_n),
+                             indexing="ij")
+        own = gid(gi, gk)
+        nbrs = []
+        for di, dk in ((-1, 0), (1, 0), (0, -1), (0, 1)):
+            ni, nk = gi + di, gk + dk
+            ok = (ni >= 0) & (ni < big_m) & (nk >= 0) & (nk < big_n)
+            nbrs.append(np.where(
+                ok, gid(np.clip(ni, 0, big_m - 1), np.clip(nk, 0, big_n - 1)),
+                own))
+        # order pattern rows by owning rank then tile-row-major so accessor
+        # row g is the accessor of vector element g (m == n, SpMV-like)
+        order = np.argsort(own.ravel(), kind="stable")
+        idx = np.stack([nb.ravel()[order] for nb in nbrs], axis=1)
+        return cls.from_indices(idx.astype(np.int32), n=big_m * big_n)

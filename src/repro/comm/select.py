@@ -1,0 +1,141 @@
+"""Model-driven strategy and BLOCKSIZE selection (closing the §5 loop).
+
+The paper's performance models are quantitative enough to *predict* which
+communication strategy wins for a given access pattern and topology.  This
+module is the selection half of the autotuner (the hardware-calibration half,
+``measure_hardware``, lives in ``repro.core.tune`` — it is about the machine,
+not about any one plan):
+
+* ``rank_strategies`` feeds the exact ``CommPlan`` volume counts through the
+  §5 formulas (``perfmodel.STRATEGY_PREDICTORS``) and sorts.
+* ``choose_strategy`` returns the predicted-fastest runnable strategy.
+* ``choose_blocksize`` sweeps BLOCKSIZE candidates through eq. 11 (the UPCv2
+  model) using the cheap per-candidate block counts — the paper's Fig. 4
+  BLOCKSIZE dial, turned by the model instead of by hand.
+
+Every ranking is pure arithmetic over already-counted volumes: autotuning
+costs a handful of closed-form evaluations plus the one-time calibration.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.comm.plan import CommPlan, Topology, blockwise_block_counts
+
+__all__ = ["rank_strategies", "choose_strategy", "choose_blocksize",
+           "blocksize_candidates", "workload_from_plan"]
+
+
+def _perfmodel():
+    # function-level import: perfmodel lives in repro.core (it is the paper's
+    # §5 equations, not comm machinery) and repro.core's package init pulls
+    # the consumers back in — importing lazily keeps the layering acyclic
+    from repro.core import perfmodel
+    return perfmodel
+
+
+def workload_from_plan(plan: CommPlan, r_nz: int):
+    pm = _perfmodel()
+    return pm.SpmvWorkload(
+        n=plan.n, r_nz=r_nz, p=plan.p, blocksize=plan.blocksize,
+        topology=plan.topology, counts=plan.counts, m=plan.m)
+
+
+def rank_strategies(
+    plan: CommPlan,
+    r_nz: int,
+    hw,
+    *,
+    candidates=None,
+) -> list[tuple[str, float]]:
+    """[(strategy, predicted_seconds)] sorted fastest-first (§5 formulas)."""
+    pm = _perfmodel()
+    w = workload_from_plan(plan, r_nz)
+    names = tuple(candidates) if candidates else tuple(pm.STRATEGY_PREDICTORS)
+    ranked = [(name, float(pm.STRATEGY_PREDICTORS[name](w, hw)))
+              for name in names]
+    ranked.sort(key=lambda kv: kv[1])
+    return ranked
+
+
+def choose_strategy(
+    plan: CommPlan,
+    r_nz: int,
+    *,
+    hw=None,
+    mesh=None,
+    axis_name=None,
+    candidates=None,
+) -> str:
+    """Predicted-fastest strategy for this plan on this hardware."""
+    if hw is None:
+        from repro.core import tune
+        hw = tune.measure_hardware(mesh, axis_name)
+    return rank_strategies(plan, r_nz, hw, candidates=candidates)[0][0]
+
+
+def blocksize_candidates(shard_size: int, *, min_bs: int = 8) -> list[int]:
+    """Power-of-two divisors of ``shard_size`` (plus shard_size itself)."""
+    out = []
+    bs = min_bs
+    while bs < shard_size:
+        if shard_size % bs == 0:
+            out.append(bs)
+        bs *= 2
+    out.append(shard_size)
+    return out
+
+
+def choose_blocksize(
+    cols: np.ndarray,
+    n: int,
+    p: int,
+    *,
+    r_nz: int | None = None,
+    topology: Topology | None = None,
+    hw=None,
+    candidates=None,
+) -> int:
+    """Eq.-11-minimizing virtual block size for this access pattern.
+
+    For each candidate BLOCKSIZE the UPCv2 model needs only the per-shard
+    needed-block counts (B_local / B_remote) — counted directly from the
+    index set without building a full plan per candidate.  Small blocks
+    shrink the whole-block volume tax; large blocks amortize per-message
+    latency; eq. 11 prices both sides and the sweep picks the minimum.
+    """
+    pm = _perfmodel()
+    cols = np.asarray(cols)
+    if cols.ndim == 1:
+        cols = cols[:, None]
+    shard_size = n // p
+    if topology is None:
+        topology = Topology(p, p)
+    if r_nz is None:
+        r_nz = cols.shape[1]
+    if hw is None:
+        from repro.core import tune
+        hw = tune.measure_hardware()
+    if candidates is None:
+        candidates = blocksize_candidates(shard_size)
+
+    best_bs, best_t = None, np.inf
+    for bs in candidates:
+        if shard_size % bs:
+            continue
+        b_local, b_remote = blockwise_block_counts(cols, n, p, bs, topology)
+        zeros = np.zeros(p, np.int64)
+        counts = pm.GatherCounts(
+            c_local_indv=zeros, c_remote_indv=zeros,
+            b_local=b_local, b_remote=b_remote, blocksize=bs,
+            s_local_out=zeros, s_remote_out=zeros,
+            s_local_in=zeros, s_remote_in=zeros, c_remote_out=zeros,
+            padded_condensed_per_shard=0, padded_blockwise_per_shard=0)
+        w = pm.SpmvWorkload(n=n, r_nz=r_nz, p=p, blocksize=bs,
+                            topology=topology, counts=counts,
+                            m=cols.shape[0])
+        t = float(pm.predict_v2(w, hw))
+        if t < best_t:
+            best_bs, best_t = bs, t
+    assert best_bs is not None, "no candidate divides the shard size"
+    return best_bs

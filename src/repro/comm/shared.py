@@ -1,0 +1,85 @@
+"""SharedVector — a UPC shared array on a JAX mesh.
+
+The paper's base object is a shared array distributed over threads with
+affinity: thread q owns a contiguous slice, and any thread may read any
+element (at a cost the §5 models price).  ``SharedVector`` is that object on
+a JAX mesh: it fixes the partitioning (mesh axis / axes + contiguous slices
++ a node ``Topology``) that ``AccessPattern`` indices refer to and that
+``IrregularGather`` plans against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm.plan import Topology
+
+__all__ = ["SharedVector", "axis_size"]
+
+
+def axis_size(mesh: jax.sharding.Mesh, axis_name) -> int:
+    """Device count on a mesh axis or product over a tuple of axes."""
+    if isinstance(axis_name, (tuple, list)):
+        return int(math.prod(mesh.shape[a] for a in axis_name))
+    return int(mesh.shape[axis_name])
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedVector:
+    """A length-``n`` vector (optional trailing feature dims) sharded in
+    contiguous slices over ``axis_name`` of ``mesh``.
+
+    ``axis_name`` may be a tuple of mesh axes; ownership then follows the
+    mesh's row-major rank order over those axes (rank = i0*s1*… + i1*… + …),
+    matching ``PartitionSpec((a, b, …))`` placement.
+    """
+
+    mesh: jax.sharding.Mesh
+    n: int
+    axis_name: str | tuple = "data"
+    topology: Topology | None = None
+
+    def __post_init__(self):
+        p = self.p
+        assert self.n % p == 0, (
+            f"n={self.n} must divide over {p} shards (pad upstream)")
+        if self.topology is None:
+            object.__setattr__(self, "topology", Topology(p, p))
+        assert self.topology.num_shards == p
+
+    @property
+    def p(self) -> int:
+        return axis_size(self.mesh, self.axis_name)
+
+    @property
+    def shard_size(self) -> int:
+        return self.n // self.p
+
+    @property
+    def spec(self) -> P:
+        return P(self.axis_name)
+
+    @property
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec)
+
+    def owner_of(self, idx):
+        """Owning shard of global element(s) ``idx``."""
+        return np.asarray(idx) // self.shard_size
+
+    def node_of(self, idx):
+        """Owning node (Topology) of global element(s) ``idx``."""
+        return self.topology.node_of(self.owner_of(idx))
+
+    def local_slice(self, shard: int) -> slice:
+        return slice(shard * self.shard_size, (shard + 1) * self.shard_size)
+
+    def put(self, values) -> jax.Array:
+        """Place host values (length n, plus feature dims) onto the mesh."""
+        values = np.asarray(values)
+        assert values.shape[0] == self.n, (values.shape, self.n)
+        return jax.device_put(values, self.sharding)

@@ -1,0 +1,305 @@
+"""The paper's communication-strategy ladder, as shard_map-local gathers.
+
+Each strategy turns a sharded vector ``x`` (one contiguous shard per device on
+the communication mesh axis) into a device-private copy ``x_copy`` — the
+paper's ``mythread_x_copy`` — that the local computation then indexes with
+*global* indices (the paper stresses that retaining global indices is what
+keeps UPCv3 easier than MPI; we retain them too).
+
+All functions here are *local* functions: they must be called inside a
+``shard_map`` over ``axis_name`` (a mesh axis name, or a tuple of axis names
+to gather over their product — e.g. Heat2D's 2D process grid).  They return
+an array whose leading dimension is >= n with the first n entries valid;
+entries at index >= n are a padding dump.  ``x`` may carry trailing feature
+dimensions (e.g. token embeddings of width d): every strategy moves whole
+feature rows.
+
+Strategies (paper §4):
+  * ``replicate`` — naive: all-gather the whole vector (volume n per device).
+  * ``blockwise`` — UPCv2: move whole virtual blocks that contain >=1 needed
+    element, via a padded block all_to_all (volume = needed blocks × BS).
+  * ``condensed`` — UPCv3: pack exactly the unique needed values, one padded
+    message per pair, single all_to_all, scatter-unpack (volume = Σ unique).
+  * ``overlap``   — beyond paper: same condensed exchange, but the consumer
+    splits its compute so the own-shard partial runs while the all_to_all is
+    in flight (see ``comm.gather.OverlapHandle``); as a pure gather it is
+    identical to ``condensed``.
+
+The ``*_start_local`` / ``*_finish_local`` pairs split each strategy at its
+collective so ``OverlapHandle`` can expose an own-compute window between the
+two (XLA's latency-hiding scheduler overlaps anything scheduled in between
+that has no data dependency on the collective's result).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.plan import CommPlan
+
+__all__ = [
+    "STRATEGIES",
+    "replicate_gather_local",
+    "blockwise_gather_local",
+    "condensed_gather_local",
+    "plan_device_args",
+    "gather_in_specs",
+    "make_gather_local",
+    "make_start_local",
+]
+
+
+def _my_shard(axis_name) -> jax.Array:
+    """Linear shard index on the comm axis (handles tuple axis names)."""
+    return jax.lax.axis_index(axis_name)
+
+
+def replicate_gather_local(x_local: jax.Array, *, axis_name: str) -> jax.Array:
+    """Naive strategy: materialize the entire shared vector on every device."""
+    return jax.lax.all_gather(x_local, axis_name, tiled=True)
+
+
+def condensed_start_local(
+    x_local: jax.Array,
+    send_local_idx: jax.Array,   # (1, P, s_max) local slice of plan array
+    *,
+    axis_name: str,
+) -> jax.Array:
+    """UPCv3 pack + consolidated exchange (paper Listing 5 pack loop +
+    ``upc_memput``/``upc_barrier``).  Returns the landed (P, s_max, ...) recv
+    buffer, not yet unpacked."""
+    buf = x_local[send_local_idx[0]]                      # (P, s_max, ...) pack
+    return jax.lax.all_to_all(                            # memput + barrier
+        buf, axis_name, split_axis=0, concat_axis=0, tiled=True
+    )
+
+
+def condensed_finish_local(
+    recv: jax.Array,
+    x_local: jax.Array,
+    recv_global_idx: jax.Array,  # (1, P, s_max)
+    *,
+    axis_name: str,
+    n: int,
+    shard_size: int,
+    extra_slots: int = 0,
+    copy_own: bool = True,
+) -> jax.Array:
+    """UPCv3 unpack: scatter the landed messages into x_copy.
+
+    Slot ``n`` is the recv padding dump (holds garbage); slots
+    ``n+1 .. n+extra_slots`` are guaranteed zero (consumers use them as the
+    padding target of their own index tables)."""
+    feat = x_local.shape[1:]
+    x_copy = jnp.zeros((n + 1 + extra_slots,) + feat, x_local.dtype)
+    x_copy = x_copy.at[recv_global_idx[0].ravel()].set(
+        recv.reshape((-1,) + feat))                       # unpack
+    if copy_own:
+        me = _my_shard(axis_name)
+        # copy own shard (paper: memcpy of own blocks into mythread_x_copy)
+        x_copy = jax.lax.dynamic_update_slice(
+            x_copy, x_local, (me * shard_size,) + (0,) * len(feat))
+    return x_copy
+
+
+def condensed_gather_local(
+    x_local: jax.Array,
+    send_local_idx: jax.Array,   # (1, P, s_max) local slice of plan array
+    recv_global_idx: jax.Array,  # (1, P, s_max)
+    *,
+    axis_name: str,
+    n: int,
+    shard_size: int,
+) -> jax.Array:
+    """UPCv3: pack -> one consolidated message per pair -> unpack.
+
+    The pack loop (paper Listing 5) is the gather ``x_local[send_idx]``; the
+    ``upc_memput`` + ``upc_barrier`` pair is the bulk-synchronous
+    ``all_to_all``; the unpack loop is the scatter into ``x_copy``.  Padding
+    lands in the dump slot at index n.
+    """
+    recv = condensed_start_local(x_local, send_local_idx, axis_name=axis_name)
+    return condensed_finish_local(
+        recv, x_local, recv_global_idx,
+        axis_name=axis_name, n=n, shard_size=shard_size,
+    )
+
+
+def blockwise_start_local(
+    x_local: jax.Array,
+    send_local_blk: jax.Array,   # (1, P, b_max)
+    *,
+    axis_name: str,
+    shard_size: int,
+    blocksize: int,
+) -> jax.Array:
+    """UPCv2 block exchange.  Returns the landed (P, b_max, BS, ...) blocks."""
+    feat = x_local.shape[1:]
+    blocks_per_shard = shard_size // blocksize
+    xb = x_local.reshape((blocks_per_shard, blocksize) + feat)
+    buf = xb[send_local_blk[0]]                            # (P, b_max, BS, ..)
+    return jax.lax.all_to_all(
+        buf, axis_name, split_axis=0, concat_axis=0, tiled=True
+    )
+
+
+def blockwise_finish_local(
+    recv: jax.Array,
+    x_local: jax.Array,
+    recv_global_blk: jax.Array,  # (1, P, b_max)
+    *,
+    axis_name: str,
+    n: int,
+    shard_size: int,
+    blocksize: int,
+    extra_slots: int = 0,
+    copy_own: bool = True,
+) -> jax.Array:
+    """UPCv2 unpack: scatter whole landed blocks into x_copy.
+
+    With ``extra_slots`` the dump block is remapped past the zero-guaranteed
+    region so slots ``n+1 .. n+extra_slots`` stay zero (requires
+    ``extra_slots < blocksize``)."""
+    feat = x_local.shape[1:]
+    nblks = n // blocksize
+    blk_idx = recv_global_blk[0].ravel()
+    if extra_slots:
+        assert extra_slots < blocksize, (
+            "zero-slot region must fit inside one virtual block")
+        # dump block nblks would cover slots [n, n+BS); remap it one block
+        # further so [n, n+BS) — including the zero slots — is never written
+        blk_idx = jnp.where(blk_idx == nblks, nblks + 1, blk_idx)
+        x_blocks = jnp.zeros((nblks + 2, blocksize) + feat, x_local.dtype)
+    else:
+        x_blocks = jnp.zeros((nblks + 1, blocksize) + feat, x_local.dtype)
+    x_blocks = x_blocks.at[blk_idx].set(
+        recv.reshape((-1, blocksize) + feat))
+    x_copy = x_blocks.reshape((-1,) + feat)
+    if copy_own:
+        me = _my_shard(axis_name)
+        x_copy = jax.lax.dynamic_update_slice(
+            x_copy, x_local, (me * shard_size,) + (0,) * len(feat))
+    return x_copy
+
+
+def blockwise_gather_local(
+    x_local: jax.Array,
+    send_local_blk: jax.Array,   # (1, P, b_max)
+    recv_global_blk: jax.Array,  # (1, P, b_max)
+    *,
+    axis_name: str,
+    n: int,
+    shard_size: int,
+    blocksize: int,
+) -> jax.Array:
+    """UPCv2: move whole needed virtual blocks (upc_memget analogue).
+
+    Every needed block travels in its entirety regardless of how many of its
+    elements are actually used — exactly the paper's trade-off: fewer, larger,
+    latency-amortizing transfers at the price of extra volume.
+    """
+    recv = blockwise_start_local(
+        x_local, send_local_blk,
+        axis_name=axis_name, shard_size=shard_size, blocksize=blocksize)
+    return blockwise_finish_local(
+        recv, x_local, recv_global_blk,
+        axis_name=axis_name, n=n, shard_size=shard_size, blocksize=blocksize,
+    )
+
+
+def plan_device_args(plan: CommPlan, strategy: str) -> tuple[Any, ...]:
+    """Host (numpy) plan arrays each strategy needs, to be passed through
+    shard_map with ``gather_in_specs`` so every device holds only its slice."""
+    if strategy == "replicate":
+        return ()
+    if strategy in ("condensed", "overlap"):
+        return (plan.send_local_idx, plan.recv_global_idx)
+    if strategy == "blockwise":
+        return (plan.send_local_blk, plan.recv_global_blk)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def gather_in_specs(strategy: str, axis_name):
+    """PartitionSpecs matching ``plan_device_args`` (sharded on dim 0)."""
+    p = jax.sharding.PartitionSpec
+    if strategy == "replicate":
+        return ()
+    return (p(axis_name), p(axis_name))
+
+
+def make_gather_local(plan: CommPlan, strategy: str, axis_name):
+    """Returns local_fn(x_local, *plan_args) -> x_copy (len >= n)."""
+    if strategy == "replicate":
+        return functools.partial(replicate_gather_local, axis_name=axis_name)
+    if strategy in ("condensed", "overlap"):
+        return functools.partial(
+            condensed_gather_local,
+            axis_name=axis_name,
+            n=plan.n,
+            shard_size=plan.shard_size,
+        )
+    if strategy == "blockwise":
+        return functools.partial(
+            blockwise_gather_local,
+            axis_name=axis_name,
+            n=plan.n,
+            shard_size=plan.shard_size,
+            blocksize=plan.blocksize,
+        )
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def make_start_local(plan: CommPlan, strategy: str, axis_name):
+    """Returns (start_fn, finish_fn) splitting the strategy at its collective.
+
+    ``start_fn(x_local, *plan_args) -> in_flight``; ``finish_fn(in_flight,
+    x_local, *plan_args, extra_slots=..., copy_own=...) -> x_copy``.  Between
+    the two calls the consumer runs compute that depends only on ``x_local``
+    — the generalized own/foreign window of the ``overlap`` rung.
+    """
+    if strategy == "replicate":
+        def start(x_local, *, axis_name=axis_name):
+            return replicate_gather_local(x_local, axis_name=axis_name)
+
+        def finish(recv, x_local, *, extra_slots=0, copy_own=True):
+            if extra_slots:
+                feat = x_local.shape[1:]
+                pad = jnp.zeros((1 + extra_slots,) + feat, x_local.dtype)
+                return jnp.concatenate([recv, pad], axis=0)
+            return recv
+
+        return start, finish
+    if strategy in ("condensed", "overlap"):
+        def start(x_local, send_idx, recv_idx):
+            return condensed_start_local(
+                x_local, send_idx, axis_name=axis_name)
+
+        def finish(recv, x_local, send_idx, recv_idx, *, extra_slots=0,
+                   copy_own=True):
+            return condensed_finish_local(
+                recv, x_local, recv_idx, axis_name=axis_name, n=plan.n,
+                shard_size=plan.shard_size, extra_slots=extra_slots,
+                copy_own=copy_own)
+
+        return start, finish
+    if strategy == "blockwise":
+        def start(x_local, send_blk, recv_blk):
+            return blockwise_start_local(
+                x_local, send_blk, axis_name=axis_name,
+                shard_size=plan.shard_size, blocksize=plan.blocksize)
+
+        def finish(recv, x_local, send_blk, recv_blk, *, extra_slots=0,
+                   copy_own=True):
+            return blockwise_finish_local(
+                recv, x_local, recv_blk, axis_name=axis_name, n=plan.n,
+                shard_size=plan.shard_size, blocksize=plan.blocksize,
+                extra_slots=extra_slots, copy_own=copy_own)
+
+        return start, finish
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+STRATEGIES = ("replicate", "blockwise", "condensed", "overlap")

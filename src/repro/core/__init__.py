@@ -1,4 +1,11 @@
-"""The paper's contribution: communication planning, strategies, models."""
+"""The paper's contribution: planning, strategies, models — and workloads.
+
+The communication machinery itself (planner, strategy ladder, plan cache,
+strategy/BLOCKSIZE selection) lives in ``repro.comm`` behind the
+``AccessPattern`` / ``SharedVector`` / ``IrregularGather`` API; this package
+keeps the paper-specific pieces (§5 performance models, workloads, cost
+analysis) plus thin deprecation re-exports of the moved names.
+"""
 from repro.core.matrix import EllpackMatrix, make_mesh_like_matrix, spmv_ref_np
 from repro.core.plan import CommPlan, GatherCounts, Topology, build_comm_plan
 from repro.core.plan_cache import get_comm_plan

@@ -5,15 +5,31 @@ two mesh axes), exactly like the paper's UPC code: each device owns an
 (m_loc × n_loc) interior tile; every step exchanges four halo sides and then
 applies the 5-point Jacobi update.
 
-Halo exchange is the paper's `halo_exchange_intrinsic` mapped to TPU idiom:
-  * vertical neighbors: contiguous rows -> plain ``ppermute`` (the paper's
-    direct ``upc_memget``; no packing needed),
-  * horizontal neighbors: non-contiguous columns -> *pack* into a contiguous
-    buffer, ``ppermute``, unpack (the paper's scratch ``xphivec_*`` arrays).
+The halo exchange is now a consumer of ``repro.comm``: the stencil
+neighborhood is an ``AccessPattern`` (``AccessPattern.from_stencil5``) over
+the tile-major flattening of the field, and ``IrregularGather`` — planned
+over the *product* of the two mesh axes — delivers each device's private
+copy.  The condensed plan works out to exactly the four halo strips (the
+paper's ``halo_exchange_intrinsic``), but the full ladder now applies:
+``strategy=`` accepts any rung or ``"auto"``, priced by the same §5 models
+as every other consumer.
 
-Devices at the grid boundary receive zeros from ppermute (no source), which
+Devices at the grid boundary read the gather's guaranteed-zero slot, which
 is harmless: the update is masked to the global interior, reproducing the
 paper's "boundary rows/cols are copied" semantics.
+
+Trade-off: like every UPCv3-style consumer, each device assembles a
+full-length ``mythread_x_copy`` (big_m*big_n elements) per step even though
+only the four halo strips are foreign — O(area) buffer traffic for an
+O(perimeter) exchange.  The exchanged *communication* volume is still just
+the halos (what the §5 models price); a strip-targeted unpack that skips
+the global x_copy is a known future optimization (see ROADMAP).
+
+``overlap=True`` (or ``strategy="overlap"``) splits each step via the
+``OverlapHandle`` protocol: the tile-interior update (no halo dependency)
+runs while the exchange is in flight; only the one-cell edge ring consumes
+the landed halos.  Composes with ``use_kernel=True`` (interior and edge
+strips through the Pallas stencil kernel).
 """
 from __future__ import annotations
 
@@ -25,121 +41,172 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comm.gather import IrregularGather
+from repro.comm.pattern import AccessPattern
+from repro.comm.plan import Topology
 
 __all__ = ["Heat2D"]
 
 
-def _shift(x, axis_name, direction, size):
-    """ppermute by +-1 along ``axis_name``; edge devices receive zeros.
-
-    ``size`` is the static axis size (``jax.lax.axis_size`` is not available
-    on every supported jax version)."""
-    perm = [(i, i + direction) for i in range(size)
-            if 0 <= i + direction < size]
-    return jax.lax.ppermute(x, axis_name, perm)
-
-
-def _step_local(phi, *, row_axis, col_axis, mprocs, nprocs, coef,
-                use_kernel: bool, overlap: bool = False):
-    """phi: (m_loc, n_loc) owned tile. Returns updated tile."""
-    m_loc, n_loc = phi.shape
-    ip = jax.lax.axis_index(row_axis)
-    kp = jax.lax.axis_index(col_axis)
-
-    # --- halo exchange (paper Listing 7) ---
-    # vertical: contiguous rows; send my last row down / first row up
-    up_halo = _shift(phi[-1:, :], row_axis, +1, mprocs)   # ip-1's last row
-    down_halo = _shift(phi[:1, :], row_axis, -1, mprocs)  # ip+1's first row
-    # horizontal: pack the column (the paper's phivec scratch), permute
-    left_halo = _shift(phi[:, -1:], col_axis, +1, nprocs)   # kp-1's last col
-    right_halo = _shift(phi[:, :1], col_axis, -1, nprocs)   # kp+1's first col
-
-    padded = jnp.zeros((m_loc + 2, n_loc + 2), phi.dtype)
-    padded = padded.at[1:-1, 1:-1].set(phi)
-    padded = padded.at[0, 1:-1].set(up_halo[0])
-    padded = padded.at[-1, 1:-1].set(down_halo[0])
-    padded = padded.at[1:-1, 0].set(left_halo[:, 0])
-    padded = padded.at[1:-1, -1].set(right_halo[:, 0])
-
-    # --- compute (paper Listing 8) ---
-    if overlap:
-        # overlap rung: the tile-interior update (cells 1..m-2 × 1..n-2)
-        # depends only on phi, so it has no data dependency on the four
-        # ppermutes above — the scheduler can hide the halo exchange behind
-        # it.  Only the one-cell edge ring consumes the landed halos, via
-        # four thin strips of `padded`.
-        from repro.kernels import ref as kref
-        inner = kref.stencil2d_ref(phi, coef)
-        top = kref.stencil2d_ref(padded[0:3, :], coef)[1, 1:-1]
-        bottom = kref.stencil2d_ref(padded[-3:, :], coef)[1, 1:-1]
-        left = kref.stencil2d_ref(padded[:, 0:3], coef)[1:-1, 1]
-        right = kref.stencil2d_ref(padded[:, -3:], coef)[1:-1, 1]
-        upd = inner.at[0, :].set(top).at[-1, :].set(bottom)
-        upd = upd.at[:, 0].set(left).at[:, -1].set(right)
-    elif use_kernel:
-        from repro.kernels import ops as kops
-        upd = kops.stencil2d(padded, coef=coef)[1:-1, 1:-1]
-    else:
-        from repro.kernels import ref as kref
-        upd = kref.stencil2d_ref(padded, coef)[1:-1, 1:-1]
-
-    # mask: global boundary cells keep their value (paper copies boundary)
-    grow = ip * m_loc + jax.lax.broadcasted_iota(jnp.int32, phi.shape, 0)
-    gcol = kp * n_loc + jax.lax.broadcasted_iota(jnp.int32, phi.shape, 1)
-    big_m, big_n = mprocs * m_loc, nprocs * n_loc
-    interior = ((grow > 0) & (grow < big_m - 1)
-                & (gcol > 0) & (gcol < big_n - 1))
-    return jnp.where(interior, upd, phi)
+def _halo_indices(big_m, big_n, mprocs, nprocs, zero_slot):
+    """Per-rank global ids of the four incoming halo strips (tile-major
+    layout, see AccessPattern.from_stencil5); out-of-domain -> zero_slot."""
+    m_loc, n_loc = big_m // mprocs, big_n // nprocs
+    tile = m_loc * n_loc
+    p = mprocs * nprocs
+    up = np.full((p, n_loc), zero_slot, np.int32)
+    down = np.full((p, n_loc), zero_slot, np.int32)
+    left = np.full((p, m_loc), zero_slot, np.int32)
+    right = np.full((p, m_loc), zero_slot, np.int32)
+    cols = np.arange(n_loc)
+    rows = np.arange(m_loc)
+    for ip in range(mprocs):
+        for kp in range(nprocs):
+            r = ip * nprocs + kp
+            if ip > 0:      # neighbor above sends its last row
+                up[r] = (r - nprocs) * tile + (m_loc - 1) * n_loc + cols
+            if ip < mprocs - 1:  # neighbor below sends its first row
+                down[r] = (r + nprocs) * tile + cols
+            if kp > 0:      # left neighbor sends its last column
+                left[r] = (r - 1) * tile + rows * n_loc + (n_loc - 1)
+            if kp < nprocs - 1:  # right neighbor sends its first column
+                right[r] = (r + 1) * tile + rows * n_loc
+    return up, down, left, right
 
 
 class Heat2D:
     """Distributed 2D heat solver on a (row_axis × col_axis) device grid.
 
-    ``overlap=True`` splits each step into the tile-interior update (which
-    needs no halo and can hide the four ppermutes) plus a thin edge-ring
-    update that consumes the landed halos — the heat-equation analogue of
-    the SpMV ``overlap`` strategy.
+    ``strategy`` picks the gather rung for the halo exchange (default
+    ``condensed``; ``"auto"`` lets the §5 models choose); ``overlap=True``
+    additionally splits each step into the tile-interior update (which
+    needs no halo and can hide the exchange) plus a thin edge-ring update
+    that consumes the landed halos — the heat-equation analogue of the SpMV
+    ``overlap`` strategy.
     """
 
     def __init__(self, mesh, big_m: int, big_n: int, *,
                  row_axis: str = "data", col_axis: str = "model",
                  coef: float = 0.1, use_kernel: bool = False,
-                 overlap: bool = False):
-        if use_kernel and overlap:
-            # same rule as DistributedSpMV: the overlap split runs the
-            # interior through the jnp path, so a silent combination would
-            # benchmark the wrong kernel
-            raise ValueError(
-                "overlap splits the step into interior + edge strips and "
-                "does not compose with use_kernel yet")
+                 overlap: bool = False, strategy: str | None = None,
+                 blocksize: int | str | None = None,
+                 shards_per_node: int | None = None, hw=None):
+        if strategy is None:
+            strategy = "overlap" if overlap else "condensed"
         self.mesh = mesh
-        self.overlap = overlap
         mprocs = mesh.shape[row_axis]
         nprocs = mesh.shape[col_axis]
         assert big_m % mprocs == 0 and big_n % nprocs == 0
         self.mprocs, self.nprocs = mprocs, nprocs
         self.big_m, self.big_n = big_m, big_n
+        m_loc, n_loc = big_m // mprocs, big_n // nprocs
         self.spec = P(row_axis, col_axis)
         self.sharding = NamedSharding(mesh, self.spec)
 
-        local = functools.partial(
-            _step_local, row_axis=row_axis, col_axis=col_axis,
-            mprocs=mprocs, nprocs=nprocs, coef=coef, use_kernel=use_kernel,
-            overlap=overlap,
+        comm_axes = (row_axis, col_axis)
+        p = mprocs * nprocs
+        n = big_m * big_n
+        pattern = AccessPattern.from_stencil5(big_m, big_n, mprocs, nprocs)
+        self.gather = IrregularGather(
+            pattern, mesh, axis_name=comm_axes, strategy=strategy,
+            blocksize=blocksize,
+            topology=Topology(p, shards_per_node or p), hw=hw,
         )
+        self.strategy = self.gather.strategy
+        self.predicted_times = self.gather.predicted_times
+        # split on the RESOLVED strategy: "auto" may pick overlap, whose
+        # predicted win exists only if the interior/edge split actually runs
+        self.overlap = overlap or self.strategy == "overlap"
+        gather = self.gather
+
+        # runtime halo index tables; padding reads the guaranteed-zero slot
+        halo_idx = _halo_indices(big_m, big_n, mprocs, nprocs, zero_slot=n + 1)
+        axis_spec = P(comm_axes)
+        self._halo_args = tuple(
+            jax.device_put(a, NamedSharding(mesh, axis_spec))
+            for a in halo_idx)
+        split = self.overlap
+
+        def step_local(phi, *args):
+            gargs = args[:len(gather.plan_args)]
+            up_i, dn_i, lf_i, rt_i = args[len(gather.plan_args):]
+            x_local = phi.reshape(-1)
+            # issue the exchange; everything reading only phi can overlap it
+            handle = gather.start_local(x_local, *gargs)
+
+            if split:
+                # interior update (cells 1..m-2 × 1..n-2) has no halo
+                # dependency — the scheduler hides the exchange behind it
+                if use_kernel:
+                    from repro.kernels import ops as kops
+                    inner = kops.stencil2d(phi, coef=coef)
+                else:
+                    from repro.kernels import ref as kref
+                    inner = kref.stencil2d_ref(phi, coef)
+
+            x_copy = handle.finish(extra_slots=1, copy_own=False)
+            padded = jnp.zeros((m_loc + 2, n_loc + 2), phi.dtype)
+            padded = padded.at[1:-1, 1:-1].set(phi)
+            padded = padded.at[0, 1:-1].set(x_copy[up_i[0]])
+            padded = padded.at[-1, 1:-1].set(x_copy[dn_i[0]])
+            padded = padded.at[1:-1, 0].set(x_copy[lf_i[0]])
+            padded = padded.at[1:-1, -1].set(x_copy[rt_i[0]])
+
+            # --- compute (paper Listing 8) ---
+            if split:
+                # only the one-cell edge ring consumes the landed halos,
+                # via four thin strips of `padded`
+                if use_kernel:
+                    from repro.kernels import ops as kops
+                    stencil = functools.partial(kops.stencil2d, coef=coef)
+                else:
+                    from repro.kernels import ref as kref
+                    stencil = functools.partial(kref.stencil2d_ref, coef=coef)
+                top = stencil(padded[0:3, :])[1, 1:-1]
+                bottom = stencil(padded[-3:, :])[1, 1:-1]
+                left = stencil(padded[:, 0:3])[1:-1, 1]
+                right = stencil(padded[:, -3:])[1:-1, 1]
+                upd = inner.at[0, :].set(top).at[-1, :].set(bottom)
+                upd = upd.at[:, 0].set(left).at[:, -1].set(right)
+            elif use_kernel:
+                from repro.kernels import ops as kops
+                upd = kops.stencil2d(padded, coef=coef)[1:-1, 1:-1]
+            else:
+                from repro.kernels import ref as kref
+                upd = kref.stencil2d_ref(padded, coef)[1:-1, 1:-1]
+
+            # mask: global boundary cells keep their value (paper copies
+            # the boundary)
+            ip = jax.lax.axis_index(row_axis)
+            kp = jax.lax.axis_index(col_axis)
+            grow = ip * m_loc + jax.lax.broadcasted_iota(jnp.int32,
+                                                         phi.shape, 0)
+            gcol = kp * n_loc + jax.lax.broadcasted_iota(jnp.int32,
+                                                         phi.shape, 1)
+            interior = ((grow > 0) & (grow < big_m - 1)
+                        & (gcol > 0) & (gcol < big_n - 1))
+            return jnp.where(interior, upd, phi)
+
+        in_specs = ((self.spec,) + gather.in_specs
+                    + (axis_spec,) * 4)
         mapped = compat.shard_map(
-            local, mesh=mesh, in_specs=self.spec, out_specs=self.spec,
+            step_local, mesh=mesh, in_specs=in_specs, out_specs=self.spec,
             check_vma=False,
         )
+        step_args = gather.plan_args + self._halo_args
 
         @functools.partial(jax.jit, static_argnames=("steps",))
         def run(phi, steps: int):
             def body(x, _):
-                return mapped(x), None
+                return mapped(x, *step_args), None
             out, _ = jax.lax.scan(body, phi, None, length=steps)
             return out
 
         self._run = run
+
+    @property
+    def counts(self):
+        return self.gather.counts
 
     def init_field(self, seed: int = 0) -> jax.Array:
         rng = np.random.default_rng(seed)

@@ -20,7 +20,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.plan import GatherCounts, Topology
+from repro.comm.plan import GatherCounts, Topology
 
 __all__ = [
     "HardwareParams", "ABEL", "TPU_V5E", "SpmvWorkload",
@@ -61,7 +61,13 @@ TPU_V5E = HardwareParams(
 
 @dataclasses.dataclass(frozen=True)
 class SpmvWorkload:
-    """Static facts about one SpMV instance on one partitioning."""
+    """Static facts about one gather workload on one partitioning.
+
+    ``m`` is the accessor-row count (the number of index rows in the access
+    pattern); for SpMV every vector element is also an accessor, so ``m ==
+    n`` — other consumers (e.g. expert-capacity slots reading tokens)
+    decouple the two.
+    """
 
     n: int
     r_nz: int
@@ -69,10 +75,15 @@ class SpmvWorkload:
     blocksize: int         # paper BLOCKSIZE (virtual block size)
     topology: Topology
     counts: GatherCounts
+    m: int | None = None   # accessor rows; None -> n (SpMV-like)
 
     @property
     def shard_size(self) -> int:
         return self.n // self.p
+
+    @property
+    def rows_per_shard(self) -> int:
+        return (self.m if self.m is not None else self.n) // self.p
 
 
 # --------------------------------------------------------------------------
@@ -89,9 +100,11 @@ def t_comp_per_thread(w: SpmvWorkload, hw: HardwareParams) -> np.ndarray:
     """Eq. (5)+(7): per-thread compute time, length-P array.
 
     Our partitioning is one contiguous shard per device (DESIGN.md §2 note 4),
-    i.e. B_thread_comp * BLOCKSIZE == shard_size for every thread.
+    i.e. B_thread_comp * BLOCKSIZE == shard_size for every thread.  Compute
+    scales with the *accessor rows* a thread evaluates (rows_per_shard ==
+    shard_size for SpMV; expert-capacity slots etc. for m != n consumers).
     """
-    elems = np.full(w.p, w.shard_size, dtype=np.float64)
+    elems = np.full(w.p, w.rows_per_shard, dtype=np.float64)
     return elems * _d_min_comp(hw, w.r_nz) / hw.w_private
 
 
@@ -200,7 +213,7 @@ def predict_overlap(w: SpmvWorkload, hw: HardwareParams) -> float:
 
     # split compute by access counts: foreign occurrences vs all occurrences
     foreign = (c.c_local_indv + c.c_remote_indv).astype(np.float64)
-    frac_foreign = foreign / float(max(1, w.shard_size * w.r_nz))
+    frac_foreign = foreign / float(max(1, w.rows_per_shard * w.r_nz))
     comp_own = comp * (1.0 - frac_foreign)
     comp_foreign = comp * frac_foreign
 

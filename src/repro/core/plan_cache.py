@@ -1,222 +1,13 @@
-"""Persistent CommPlan cache — skip the O(nnz) host-side preparation step.
+"""Deprecation shim — the plan cache moved to ``repro.comm.plan_cache``.
 
-The paper amortizes its one-time preparation step (§4.3.1) over ~1000 SpMV
-iterations *within one run*.  Real workloads re-run: the same mesh is loaded
-again tomorrow, on the same pod, with the same partitioning.  This module
-extends the amortization *across processes* by memoizing ``build_comm_plan``
-on a content hash of everything the plan depends on:
-
-    sha256(cols bytes) + n + p + blocksize + topology  ->  plan arrays (.npz)
-
-Two layers:
-  * an in-process dict (free; hit when the same engine is constructed twice
-    in one process, e.g. to compare strategies over one matrix), and
-  * an on-disk ``.npz`` store under ``$REPRO_PLAN_CACHE_DIR`` (default
-    ``~/.cache/repro/commplans``), safe against concurrent writers via
-    write-to-temp + atomic rename.
-
-``stats`` counts hits/misses/builds so tests (and users) can verify that a
-second construction performs no plan rebuild.  Set ``REPRO_PLAN_CACHE=0`` to
-disable entirely.  Plans whose arrays exceed ``REPRO_PLAN_CACHE_MAX_BYTES``
-(default 256 MiB, pre-compression) stay memory-only so pathological
-partitionings cannot silently fill the user's disk; entries are written with
-``np.savez_compressed`` (plan arrays are mostly padding and compress well).
+Re-exported module-level state (``stats``, the memory LRU, env knobs) is the
+same object as ``repro.comm.plan_cache``'s, so existing monitoring keeps
+seeing every hit/miss.  New code should import from ``repro.comm``.
 """
-from __future__ import annotations
-
-import collections
-import dataclasses
-import hashlib
-import os
-import tempfile
-
-import numpy as np
-
-from repro.core.plan import CommPlan, GatherCounts, Topology, build_comm_plan
+from repro.comm.plan_cache import (  # noqa: F401
+    CacheStats, cache_dir, clear_memory_cache, get_comm_plan, plan_key,
+    stats, _disk_path, _memory,
+)
 
 __all__ = ["plan_key", "get_comm_plan", "clear_memory_cache", "stats",
            "CacheStats", "cache_dir"]
-
-# Bump when the CommPlan field set/serialization changes OR when
-# build_comm_plan's output semantics change for the same inputs (planner bug
-# fixes included) — the version participates in the content key, so bumping
-# invalidates every stale on-disk entry.
-_FORMAT_VERSION = 1
-
-# fields serialized verbatim as arrays
-_PLAN_ARRAYS = ("send_counts", "send_local_idx", "recv_global_idx",
-                "send_block_counts", "send_local_blk", "recv_global_blk",
-                "loc_cols", "loc_src", "rem_cols", "rem_src")
-_COUNT_ARRAYS = ("c_local_indv", "c_remote_indv", "b_local", "b_remote",
-                 "s_local_out", "s_remote_out", "s_local_in", "s_remote_in",
-                 "c_remote_out")
-_COUNT_SCALARS = ("blocksize", "padded_condensed_per_shard",
-                  "padded_blockwise_per_shard")
-
-
-@dataclasses.dataclass
-class CacheStats:
-    memory_hits: int = 0
-    disk_hits: int = 0
-    misses: int = 0     # full plan builds performed
-
-    def reset(self) -> None:
-        self.memory_hits = self.disk_hits = self.misses = 0
-
-    @property
-    def hits(self) -> int:
-        return self.memory_hits + self.disk_hits
-
-
-stats = CacheStats()
-# LRU-bounded: long-lived processes sweeping many matrices must not retain
-# every plan ever built (large partitionings are hundreds of MB each)
-_memory: "collections.OrderedDict[str, CommPlan]" = collections.OrderedDict()
-
-
-def _max_memory_entries() -> int:
-    return int(os.environ.get("REPRO_PLAN_CACHE_MEM_ENTRIES", 16))
-
-
-def clear_memory_cache() -> None:
-    _memory.clear()
-
-
-def _memory_put(key: str, plan: CommPlan) -> None:
-    _memory[key] = plan
-    _memory.move_to_end(key)
-    while len(_memory) > max(1, _max_memory_entries()):
-        _memory.popitem(last=False)
-
-
-def cache_dir() -> str:
-    return os.environ.get(
-        "REPRO_PLAN_CACHE_DIR",
-        os.path.join(os.path.expanduser("~"), ".cache", "repro", "commplans"),
-    )
-
-
-def _enabled() -> bool:
-    return os.environ.get("REPRO_PLAN_CACHE", "1") != "0"
-
-
-def _max_disk_bytes() -> int:
-    return int(os.environ.get("REPRO_PLAN_CACHE_MAX_BYTES", 256 << 20))
-
-
-def plan_key(
-    cols: np.ndarray, n: int, p: int, blocksize: int, topology: Topology
-) -> str:
-    """Content hash of every input ``build_comm_plan`` depends on."""
-    cols = np.ascontiguousarray(np.asarray(cols, dtype=np.int32))
-    h = hashlib.sha256()
-    h.update(f"v{_FORMAT_VERSION}|{n}|{p}|{blocksize}|"
-             f"{topology.num_shards}|{topology.shards_per_node}|"
-             f"{cols.shape}".encode())
-    h.update(cols.tobytes())
-    return h.hexdigest()
-
-
-def _serialize(plan: CommPlan) -> dict[str, np.ndarray]:
-    out = {name: getattr(plan, name) for name in _PLAN_ARRAYS}
-    for name in _COUNT_ARRAYS:
-        out[f"counts.{name}"] = getattr(plan.counts, name)
-    meta = np.array(
-        [_FORMAT_VERSION, plan.n, plan.p, plan.shard_size, plan.blocksize,
-         plan.topology.num_shards, plan.topology.shards_per_node,
-         plan.s_max, plan.b_max, plan.r_loc_max, plan.r_rem_max]
-        + [getattr(plan.counts, name) for name in _COUNT_SCALARS],
-        dtype=np.int64,
-    )
-    out["meta"] = meta
-    return out
-
-
-def _deserialize(data) -> CommPlan:
-    meta = data["meta"]
-    if int(meta[0]) != _FORMAT_VERSION:
-        raise ValueError("stale plan-cache format")
-    topo = Topology(num_shards=int(meta[5]), shards_per_node=int(meta[6]))
-    counts = GatherCounts(
-        **{name: np.asarray(data[f"counts.{name}"]) for name in _COUNT_ARRAYS},
-        blocksize=int(meta[11]),
-        padded_condensed_per_shard=int(meta[12]),
-        padded_blockwise_per_shard=int(meta[13]),
-    )
-    return CommPlan(
-        n=int(meta[1]), p=int(meta[2]), shard_size=int(meta[3]),
-        blocksize=int(meta[4]), topology=topo,
-        s_max=int(meta[7]), b_max=int(meta[8]),
-        r_loc_max=int(meta[9]), r_rem_max=int(meta[10]),
-        counts=counts,
-        **{name: np.asarray(data[name]) for name in _PLAN_ARRAYS},
-    )
-
-
-def _disk_path(key: str) -> str:
-    return os.path.join(cache_dir(), f"{key}.npz")
-
-
-def _load_disk(key: str) -> CommPlan | None:
-    path = _disk_path(key)
-    if not os.path.exists(path):
-        return None
-    try:
-        with np.load(path) as data:
-            return _deserialize(data)
-    except Exception:
-        # corrupt / stale entry: treat as miss, rebuild will overwrite
-        return None
-
-
-def _store_disk(key: str, plan: CommPlan) -> None:
-    data = _serialize(plan)
-    if sum(a.nbytes for a in data.values()) > _max_disk_bytes():
-        return  # memory-only: don't let huge plans fill the disk
-    path = _disk_path(key)
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
-    try:
-        with os.fdopen(fd, "wb") as f:
-            np.savez_compressed(f, **data)
-        os.replace(tmp, path)  # atomic: concurrent writers race harmlessly
-    except Exception:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-
-
-def get_comm_plan(
-    cols: np.ndarray,
-    n: int,
-    p: int,
-    *,
-    blocksize: int | None = None,
-    topology: Topology | None = None,
-    cache: bool = True,
-) -> CommPlan:
-    """Cached drop-in for ``build_comm_plan`` (same semantics, same result)."""
-    shard_size = n // p
-    bs = shard_size if blocksize is None else blocksize
-    topo = topology if topology is not None else Topology(p, p)
-    if not (cache and _enabled()):
-        stats.misses += 1
-        return build_comm_plan(cols, n, p, blocksize=blocksize,
-                               topology=topology)
-
-    key = plan_key(cols, n, p, bs, topo)
-    plan = _memory.get(key)
-    if plan is not None:
-        stats.memory_hits += 1
-        _memory.move_to_end(key)
-        return plan
-    plan = _load_disk(key)
-    if plan is not None:
-        stats.disk_hits += 1
-        _memory_put(key, plan)
-        return plan
-
-    stats.misses += 1
-    plan = build_comm_plan(cols, n, p, blocksize=blocksize, topology=topology)
-    _memory_put(key, plan)
-    _store_disk(key, plan)
-    return plan

@@ -1,22 +1,27 @@
-"""Distributed SpMV engine — the paper's workload as a composable JAX module.
+"""Distributed SpMV engine — the paper's workload on the repro.comm runtime.
 
-``DistributedSpMV`` owns: the row partitioning, the one-time ``CommPlan``
-(paper §4.3.1, persistently cached through ``plan_cache``), the sharded
-matrix residency, and a jitted ``shard_map`` step that fuses gather
-(strategy-pluggable) + local EllPack compute.  The local compute can run
-through the Pallas kernel (``use_kernel=True``) or the pure-jnp reference.
+``DistributedSpMV`` is now a *consumer* of ``repro.comm``: it derives an
+``AccessPattern`` from the EllPack column table, hands it to
+``IrregularGather`` (which owns the cached ``CommPlan``, the strategy
+resolution, and the device-resident plan arrays), and fuses the gather with
+the local EllPack compute inside one jitted ``shard_map``.  The local
+compute can run through the Pallas kernels (``use_kernel=True``) or the
+pure-jnp reference.
 
 ``strategy`` may be any rung of the ladder (``replicate`` / ``blockwise`` /
 ``condensed`` / ``overlap``) or ``"auto"``, which micro-benchmarks the
-hardware parameters once per mesh and lets the §5 performance models pick
-(``core.tune``).  The resolved choice is available as ``engine.strategy``;
+hardware parameters once per mesh and lets the §5 performance models pick.
+``blocksize`` may likewise be ``"auto"`` (eq.-11-minimizing BLOCKSIZE).  The
+resolved choices are available as ``engine.strategy`` / ``engine.blocksize``;
 the request is kept in ``engine.requested_strategy``.
 
-The ``overlap`` strategy issues the condensed ``all_to_all`` first, runs the
-own-shard partial SpMV (which depends only on ``x_local``) while the exchange
-is in flight, then finishes with the foreign partial on the unpacked remote
-values — XLA's latency-hiding scheduler can hide the collective behind the
-first partial.  It also skips the eq.-14 own-shard copy into ``x_copy``.
+The ``overlap`` strategy uses the ``OverlapHandle`` protocol: issue the
+condensed ``all_to_all``, run the own-shard partial SpMV (which depends only
+on ``x_local``) while the exchange is in flight, then finish with the
+foreign partial on the unpacked remote values — XLA's latency-hiding
+scheduler can hide the collective behind the first partial.  With
+``use_kernel=True`` both partials run through the windowed Pallas kernel
+(the split-kernel on-copy variant).
 
 Usage:
     mesh = jax.make_mesh((8,), ("data",))
@@ -27,18 +32,16 @@ Usage:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comm.gather import IrregularGather
+from repro.comm.pattern import AccessPattern
+from repro.comm.plan import CommPlan, Topology
 from repro.core.matrix import EllpackMatrix
-from repro.core.plan import CommPlan, Topology
-from repro.core import plan_cache
-from repro.core import strategies as strat
 
 __all__ = ["DistributedSpMV"]
 
@@ -62,15 +65,12 @@ class DistributedSpMV:
         *,
         axis_name: str = "data",
         strategy: str = "condensed",
-        blocksize: int | None = None,
+        blocksize: int | str | None = None,
         shards_per_node: int | None = None,
         use_kernel: bool = False,
         hw=None,
         use_plan_cache: bool = True,
     ):
-        valid = strat.STRATEGIES + ("auto",)
-        if strategy not in valid:
-            raise ValueError(f"strategy must be one of {valid}")
         self.matrix = matrix
         self.mesh = mesh
         self.axis_name = axis_name
@@ -79,30 +79,18 @@ class DistributedSpMV:
         n = matrix.n
         assert n % p == 0, "pad the matrix so n divides the mesh axis"
         topology = Topology(p, shards_per_node or p)
-        self.plan: CommPlan = plan_cache.get_comm_plan(
-            matrix.cols, n, p, blocksize=blocksize, topology=topology,
-            cache=use_plan_cache,
-        )
 
+        self.gather = IrregularGather(
+            AccessPattern.from_ellpack(matrix), mesh,
+            axis_name=axis_name, strategy=strategy, blocksize=blocksize,
+            topology=topology, hw=hw, use_plan_cache=use_plan_cache,
+        )
+        self.plan: CommPlan = self.gather.plan
         self.requested_strategy = strategy
-        self.predicted_times: dict[str, float] | None = None
-        if strategy == "auto":
-            from repro.core import tune
-            if hw is None:
-                hw = tune.measure_hardware(mesh, axis_name)
-            candidates = None
-            if use_kernel:  # kernel path consumes a full x_copy
-                candidates = tuple(s for s in strat.STRATEGIES
-                                   if s != "overlap")
-            ranked = tune.rank_strategies(self.plan, matrix.r_nz, hw,
-                                          candidates=candidates)
-            self.predicted_times = dict(ranked)
-            strategy = ranked[0][0]
+        self.predicted_times = self.gather.predicted_times
+        strategy = self.gather.strategy
         self.strategy = strategy
-        if use_kernel and strategy == "overlap":
-            raise ValueError(
-                "overlap splits the local compute and bypasses x_copy; "
-                "it does not compose with use_kernel yet")
+        self.blocksize = self.plan.blocksize
 
         shard = NamedSharding(mesh, P(axis_name))
         shard2 = NamedSharding(mesh, P(axis_name, None))
@@ -114,16 +102,35 @@ class DistributedSpMV:
         else:
             self._vals = jax.device_put(matrix.vals, shard2)
             self._cols = jax.device_put(matrix.cols, shard2)
-        self._gather_args = tuple(
-            jax.device_put(a, NamedSharding(mesh, P(axis_name)))
-            for a in strat.plan_device_args(self.plan, strategy)
-        )
+        self._gather_args = self.gather.plan_args
         self._plan_args = self._gather_args
 
-        gather_local = strat.make_gather_local(self.plan, strategy, axis_name)
+        gather = self.gather
         shard_size = self.plan.shard_size
 
-        if strategy == "overlap":
+        if strategy == "overlap" and use_kernel:
+            from repro.kernels import ops as kops
+            plan = self.plan
+            own_fn, rem_fn, kargs = kops.make_spmv_overlap_sharded(
+                plan, matrix.vals)
+            self._plan_args = self._gather_args + tuple(
+                jax.device_put(a, shard) for a in kargs)
+            n_kargs = len(kargs)
+
+            def step_local(x_local, diag_l, send_idx, recv_idx, *args):
+                assert len(args) == n_kargs
+                handle = gather.start_local(x_local, send_idx, recv_idx)
+                # own-shard partial through the kernel on x_local (+ its
+                # one zero pad slot), overlapping the in-flight exchange
+                x_ext = jnp.concatenate(
+                    [x_local, jnp.zeros((1,), x_local.dtype)])
+                y_own = own_fn(diag_l, x_ext, *args[:3])
+                x_copy = handle.finish(extra_slots=1, copy_own=False)
+                y_rem = rem_fn(x_copy, *args[3:])
+                return y_own + y_rem
+
+            kernel_specs = (P(axis_name),) * n_kargs
+        elif strategy == "overlap":
             plan = self.plan
             # split vals the same way the plan split cols; padded slots point
             # at a guaranteed-zero x slot, so their vals are never observed
@@ -138,19 +145,17 @@ class DistributedSpMV:
                            recv_idx, loc_cols_l, loc_vals_l, rem_cols_l,
                            rem_vals_l):
                 # 1. issue the condensed exchange (paper Listing 5 pack)
-                buf = x_local[send_idx[0]]
-                recv = jax.lax.all_to_all(
-                    buf, axis_name, split_axis=0, concat_axis=0, tiled=True)
-                # 2. own-shard partial: no dependency on `recv`, so the
-                # scheduler can run it while the collective is in flight
+                handle = gather.start_local(x_local, send_idx, recv_idx)
+                # 2. own-shard partial: no dependency on the landed messages,
+                # so the scheduler can run it while the collective is in
+                # flight
                 x_ext = jnp.concatenate(
                     [x_local, jnp.zeros((1,), x_local.dtype)])
                 y_own = diag_l * x_local + (
                     loc_vals_l * x_ext[loc_cols_l]).sum(axis=-1)
                 # 3. foreign partial on the landed remote values; slot n is
                 # the recv padding dump, slot n+1 the compute padding (zero)
-                x_copy = jnp.zeros((n + 2,), x_local.dtype)
-                x_copy = x_copy.at[recv_idx[0].ravel()].set(recv.ravel())
+                x_copy = handle.finish(extra_slots=1, copy_own=False)
                 y_rem = (rem_vals_l * x_copy[rem_cols_l]).sum(axis=-1)
                 return y_own + y_rem
 
@@ -165,10 +170,10 @@ class DistributedSpMV:
                 for a in kplan
             )
             self._plan_args = self._plan_args + kplan_args
-            n_gather_args = len(strat.plan_device_args(self.plan, strategy))
+            n_gather_args = len(self._gather_args)
 
             def step_local(x_local, diag_l, vals_l, cols_l, *args):
-                x_copy = gather_local(x_local, *args[:n_gather_args])
+                x_copy = gather.local(x_local, *args[:n_gather_args])
                 return kernel_local(diag_l, vals_l, x_copy,
                                     *args[n_gather_args:])
 
@@ -176,7 +181,7 @@ class DistributedSpMV:
                             P(axis_name, None))
         else:
             def step_local(x_local, diag_l, vals_l, cols_l, *plan_args):
-                x_copy = gather_local(x_local, *plan_args)
+                x_copy = gather.local(x_local, *plan_args)
                 return _spmv_local(
                     x_copy, diag_l, vals_l, cols_l,
                     shard_size=shard_size, axis_name=axis_name,
@@ -192,7 +197,7 @@ class DistributedSpMV:
             base_specs = (P(axis_name), P(axis_name), P(axis_name, None),
                           P(axis_name, None))
         in_specs = (base_specs
-                    + strat.gather_in_specs(strategy, axis_name)
+                    + self.gather.in_specs
                     + kernel_specs)
         mapped = compat.shard_map(
             step_local, mesh=mesh, in_specs=in_specs, out_specs=P(axis_name),
@@ -205,29 +210,16 @@ class DistributedSpMV:
 
         self._step = step
 
-        def gather_only_local(x_local, *plan_args):
-            return gather_local(x_local, *plan_args)[None]
-
-        self._gather_only = jax.jit(compat.shard_map(
-            gather_only_local,
-            mesh=mesh,
-            in_specs=(P(axis_name),) + strat.gather_in_specs(strategy, axis_name),
-            out_specs=P(axis_name),
-            check_vma=False,
-        ))
-        self._gather_only_args = self._gather_args
-
     # ---- public API ----
     def shard_vector(self, x: np.ndarray) -> jax.Array:
-        return jax.device_put(
-            x, NamedSharding(self.mesh, P(self.axis_name)))
+        return self.gather.shard_vector(x)
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return self._step(x)
 
     def gather_x_copy(self, x: jax.Array) -> jax.Array:
         """(P, >=n) array: row q is device q's private x_copy (testing)."""
-        return self._gather_only(x, *self._gather_only_args)
+        return self.gather(x)
 
     @property
     def counts(self):

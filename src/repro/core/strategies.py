@@ -1,35 +1,18 @@
-"""The paper's communication-strategy ladder, as shard_map-local gathers.
+"""Deprecation shim — the strategy ladder moved to ``repro.comm.strategies``.
 
-Each strategy turns a sharded vector ``x`` (one contiguous shard per device on
-the communication mesh axis) into a device-private copy ``x_copy`` — the
-paper's ``mythread_x_copy`` — that the local computation then indexes with
-*global* indices (the paper stresses that retaining global indices is what
-keeps UPCv3 easier than MPI; we retain them too).
-
-All functions here are *local* functions: they must be called inside a
-``shard_map`` over ``axis_name``.  They return an array of length >= n whose
-first n entries are valid; entries at index >= n are a padding dump.
-
-Strategies (paper §4):
-  * ``replicate`` — naive: all-gather the whole vector (volume n per device).
-  * ``blockwise`` — UPCv2: move whole virtual blocks that contain >=1 needed
-    element, via a padded block all_to_all (volume = needed blocks × BS).
-  * ``condensed`` — UPCv3: pack exactly the unique needed values, one padded
-    message per pair, single all_to_all, scatter-unpack (volume = Σ unique).
-  * ``overlap``   — beyond paper: same condensed exchange, but the consumer
-    splits its compute so the own-shard partial runs while the all_to_all is
-    in flight (see ``spmv.DistributedSpMV``); as a pure gather it is
-    identical to ``condensed``.
+New code should go through ``repro.comm.IrregularGather`` instead of calling
+the local gather functions directly.
 """
-from __future__ import annotations
-
-import functools
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.plan import CommPlan
+from repro.comm.strategies import (  # noqa: F401
+    STRATEGIES,
+    replicate_gather_local,
+    blockwise_gather_local,
+    condensed_gather_local,
+    plan_device_args,
+    gather_in_specs,
+    make_gather_local,
+    make_start_local,
+)
 
 __all__ = [
     "STRATEGIES",
@@ -39,114 +22,3 @@ __all__ = [
     "plan_device_args",
     "gather_in_specs",
 ]
-
-
-def replicate_gather_local(x_local: jax.Array, *, axis_name: str) -> jax.Array:
-    """Naive strategy: materialize the entire shared vector on every device."""
-    return jax.lax.all_gather(x_local, axis_name, tiled=True)
-
-
-def condensed_gather_local(
-    x_local: jax.Array,
-    send_local_idx: jax.Array,   # (1, P, s_max) local slice of plan array
-    recv_global_idx: jax.Array,  # (1, P, s_max)
-    *,
-    axis_name: str,
-    n: int,
-    shard_size: int,
-) -> jax.Array:
-    """UPCv3: pack -> one consolidated message per pair -> unpack.
-
-    The pack loop (paper Listing 5) is the gather ``x_local[send_idx]``; the
-    ``upc_memput`` + ``upc_barrier`` pair is the bulk-synchronous
-    ``all_to_all``; the unpack loop is the scatter into ``x_copy``.  Padding
-    lands in the dump slot at index n.
-    """
-    buf = x_local[send_local_idx[0]]                      # (P, s_max) pack
-    recv = jax.lax.all_to_all(                            # memput + barrier
-        buf, axis_name, split_axis=0, concat_axis=0, tiled=True
-    )
-    x_copy = jnp.zeros((n + 1,), x_local.dtype)
-    x_copy = x_copy.at[recv_global_idx[0].ravel()].set(recv.ravel())  # unpack
-    me = jax.lax.axis_index(axis_name)
-    # copy own shard (paper: memcpy of own blocks into mythread_x_copy)
-    x_copy = jax.lax.dynamic_update_slice(x_copy, x_local, (me * shard_size,))
-    return x_copy
-
-
-def blockwise_gather_local(
-    x_local: jax.Array,
-    send_local_blk: jax.Array,   # (1, P, b_max)
-    recv_global_blk: jax.Array,  # (1, P, b_max)
-    *,
-    axis_name: str,
-    n: int,
-    shard_size: int,
-    blocksize: int,
-) -> jax.Array:
-    """UPCv2: move whole needed virtual blocks (upc_memget analogue).
-
-    Every needed block travels in its entirety regardless of how many of its
-    elements are actually used — exactly the paper's trade-off: fewer, larger,
-    latency-amortizing transfers at the price of extra volume.
-    """
-    blocks_per_shard = shard_size // blocksize
-    nblks = n // blocksize
-    xb = x_local.reshape(blocks_per_shard, blocksize)
-    buf = xb[send_local_blk[0]]                            # (P, b_max, BS)
-    recv = jax.lax.all_to_all(
-        buf, axis_name, split_axis=0, concat_axis=0, tiled=True
-    )
-    x_blocks = jnp.zeros((nblks + 1, blocksize), x_local.dtype)
-    x_blocks = x_blocks.at[recv_global_blk[0].ravel()].set(
-        recv.reshape(-1, blocksize)
-    )
-    x_copy = x_blocks.reshape(-1)                          # (n + BS,)
-    me = jax.lax.axis_index(axis_name)
-    x_copy = jax.lax.dynamic_update_slice(x_copy, x_local, (me * shard_size,))
-    return x_copy
-
-
-def plan_device_args(plan: CommPlan, strategy: str) -> tuple[Any, ...]:
-    """Host (numpy) plan arrays each strategy needs, to be passed through
-    shard_map with ``gather_in_specs`` so every device holds only its slice."""
-    if strategy == "replicate":
-        return ()
-    if strategy in ("condensed", "overlap"):
-        return (plan.send_local_idx, plan.recv_global_idx)
-    if strategy == "blockwise":
-        return (plan.send_local_blk, plan.recv_global_blk)
-    raise ValueError(f"unknown strategy {strategy!r}")
-
-
-def gather_in_specs(strategy: str, axis_name: str):
-    """PartitionSpecs matching ``plan_device_args`` (sharded on dim 0)."""
-    p = jax.sharding.PartitionSpec
-    if strategy == "replicate":
-        return ()
-    return (p(axis_name), p(axis_name))
-
-
-def make_gather_local(plan: CommPlan, strategy: str, axis_name: str):
-    """Returns local_fn(x_local, *plan_args) -> x_copy (len >= n)."""
-    if strategy == "replicate":
-        return functools.partial(replicate_gather_local, axis_name=axis_name)
-    if strategy in ("condensed", "overlap"):
-        return functools.partial(
-            condensed_gather_local,
-            axis_name=axis_name,
-            n=plan.n,
-            shard_size=plan.shard_size,
-        )
-    if strategy == "blockwise":
-        return functools.partial(
-            blockwise_gather_local,
-            axis_name=axis_name,
-            n=plan.n,
-            shard_size=plan.shard_size,
-            blocksize=plan.blocksize,
-        )
-    raise ValueError(f"unknown strategy {strategy!r}")
-
-
-STRATEGIES = ("replicate", "blockwise", "condensed", "overlap")

@@ -1,22 +1,17 @@
-"""Model-driven strategy autotuning (closing the paper's §5 loop).
+"""Hardware calibration for the model-driven autotuner (§5.4 / §6.2).
 
-The paper's performance models are quantitative enough to *predict* which
-communication strategy wins for a given access pattern and topology — this
-module closes that loop so ``DistributedSpMV(..., strategy="auto")`` needs no
-hand-picked strategy:
+``measure_hardware`` micro-benchmarks the paper's hardware characteristic
+parameters ONCE PER MESH — a STREAM-like copy for ``w_private``, a large
+ring ``ppermute`` for ``w_remote``, a tiny one for ``tau``, and a
+random-gather probe for the effective non-contiguous access granularity
+``cacheline`` (the per-element pack/unpack cost).  Results are memoized per
+(devices, axis) for the life of the process.
 
-1. ``measure_hardware`` micro-benchmarks the paper's hardware characteristic
-   parameters (§5.4 / §6.2) ONCE PER MESH — a STREAM-like copy for
-   ``w_private``, a large ring ``ppermute`` for ``w_remote``, a tiny one for
-   ``tau``, and a random-gather probe for the effective non-contiguous access
-   granularity ``cacheline`` (the per-element pack/unpack cost).  Results are
-   memoized per (devices, axis) for the life of the process.
-2. ``rank_strategies`` feeds the exact ``CommPlan`` volume counts through the
-   §5 formulas (``perfmodel.STRATEGY_PREDICTORS``) and sorts.
-3. ``choose_strategy`` returns the predicted-fastest runnable strategy.
-
-Every ranking is pure arithmetic over already-counted volumes: autotuning
-costs four closed-form evaluations plus a one-time ~100 ms calibration.
+The *selection* half of the autotuner (ranking strategies and sweeping
+BLOCKSIZE through the §5 formulas) moved to ``repro.comm.select`` with the
+rest of the communication machinery; ``rank_strategies`` /
+``choose_strategy`` / ``choose_blocksize`` / ``workload_from_plan`` are
+re-exported here for compatibility.
 """
 from __future__ import annotations
 
@@ -24,14 +19,14 @@ import time
 
 import numpy as np
 
-from repro.core.perfmodel import (
-    HardwareParams, SpmvWorkload, STRATEGY_PREDICTORS,
+from repro.comm.select import (  # noqa: F401  (compat re-exports)
+    choose_blocksize, choose_strategy, rank_strategies, workload_from_plan,
 )
-from repro.core.plan import CommPlan
+from repro.core.perfmodel import HardwareParams
 
 __all__ = [
     "measure_hardware", "rank_strategies", "choose_strategy",
-    "clear_hardware_cache", "workload_from_plan",
+    "choose_blocksize", "clear_hardware_cache", "workload_from_plan",
 ]
 
 _hw_cache: dict[tuple, HardwareParams] = {}
@@ -130,40 +125,3 @@ def measure_hardware(
         cacheline=cacheline, elem=elem_bytes, idx=4)
     _hw_cache[key] = hw
     return hw
-
-
-def workload_from_plan(plan: CommPlan, r_nz: int) -> SpmvWorkload:
-    return SpmvWorkload(
-        n=plan.n, r_nz=r_nz, p=plan.p, blocksize=plan.blocksize,
-        topology=plan.topology, counts=plan.counts)
-
-
-def rank_strategies(
-    plan: CommPlan,
-    r_nz: int,
-    hw: HardwareParams,
-    *,
-    candidates=None,
-) -> list[tuple[str, float]]:
-    """[(strategy, predicted_seconds)] sorted fastest-first (§5 formulas)."""
-    w = workload_from_plan(plan, r_nz)
-    names = tuple(candidates) if candidates else tuple(STRATEGY_PREDICTORS)
-    ranked = [(name, float(STRATEGY_PREDICTORS[name](w, hw)))
-              for name in names]
-    ranked.sort(key=lambda kv: kv[1])
-    return ranked
-
-
-def choose_strategy(
-    plan: CommPlan,
-    r_nz: int,
-    *,
-    hw: HardwareParams | None = None,
-    mesh=None,
-    axis_name: str | None = None,
-    candidates=None,
-) -> str:
-    """Predicted-fastest strategy for this plan on this hardware."""
-    if hw is None:
-        hw = measure_hardware(mesh, axis_name)
-    return rank_strategies(plan, r_nz, hw, candidates=candidates)[0][0]

@@ -21,7 +21,8 @@ from repro.kernels.stencil2d import stencil2d as _stencil2d_kernel
 
 __all__ = [
     "on_tpu", "plan_spmv_windows", "ellpack_spmv", "make_spmv_on_copy_sharded",
-    "pack_gather", "stencil2d", "decode_attention",
+    "make_spmv_overlap_sharded", "pack_gather", "stencil2d",
+    "decode_attention",
 ]
 
 
@@ -157,6 +158,102 @@ def make_spmv_on_copy_sharded(
         )
 
     return local_fn, (win_blk, cols_rel, own_rel)
+
+
+def make_spmv_overlap_sharded(plan, vals: np.ndarray, *,
+                              rows_per_block: int = 256, interpret=None):
+    """Split-kernel on-copy variant of the ``overlap`` rung.
+
+    The overlap strategy splits the local SpMV into an own-shard partial
+    (reads only ``x_local``, runs while the condensed all_to_all is in
+    flight) and a foreign partial (reads the landed ``x_copy``).  This
+    builds BOTH partials as windowed Pallas kernels from the plan's
+    own/foreign column split:
+
+      * own kernel: columns are the plan's shard-local ``loc_cols`` (padding
+        -> the zero slot at ``shard_size``), x is ``x_local`` + 1 pad slot;
+      * foreign kernel: columns are ``rem_cols`` with padding redirected to
+        an in-window fallback whose value is zeroed out of ``vals`` (the
+        jnp path instead relies on x_copy's zero slot at n+1, which would
+        blow the kernel's window up to the whole vector), diag = 0.
+
+    Returns ``(own_fn, rem_fn, kargs)``: ``kargs`` are 7 host arrays shaped
+    (P, ...) to pass through shard_map with in_specs P(axis);
+    ``own_fn(diag_l, x_ext, *kargs[:3])`` and ``rem_fn(x_copy, *kargs[3:])``
+    are the two shard-local partials.
+    """
+    interpret = _interpret_default(interpret)
+    p, n, shard = plan.p, plan.n, plan.shard_size
+    rows_per_block = min(rows_per_block, shard)
+    assert shard % rows_per_block == 0
+    nblk_rows = shard // rows_per_block
+    lane = 128
+
+    # ---- own half: local indices in [0, shard]; one static window covers
+    # the whole extended shard, so win_blk is identically zero ----
+    loc_vals = np.take_along_axis(vals, plan.loc_src, axis=1)
+    window_own = max(lane, int(np.ceil((shard + 1) / lane)) * lane)
+    loc_vals_s = loc_vals.reshape(p, shard, -1)
+    loc_cols_s = plan.loc_cols.reshape(p, shard, -1)
+    own_win = np.zeros((p, nblk_rows), np.int32)
+    own_rel_const = np.arange(shard, dtype=np.int32)
+
+    # ---- foreign half: global indices; padding (n + 1) must not join the
+    # window span, so redirect padded slots to the block's lowest valid
+    # column and zero their vals ----
+    rem_vals = np.take_along_axis(vals, plan.rem_src, axis=1)
+    valid = plan.rem_cols != (n + 1)
+    rem_vals = np.where(valid, rem_vals, 0).astype(vals.dtype)
+    r_rem = plan.rem_cols.shape[1]
+    cols_v = np.where(valid, plan.rem_cols, np.iinfo(np.int32).max)
+    cols_blk = cols_v.reshape(p, nblk_rows, rows_per_block * r_rem)
+    lo = cols_blk.min(axis=2)
+    lo = np.where(lo == np.iinfo(np.int32).max, 0, lo)      # all-pad block
+    hi_blk = np.where(valid, plan.rem_cols, 0).reshape(
+        p, nblk_rows, rows_per_block * r_rem)
+    hi = np.maximum(hi_blk.max(axis=2), lo)
+    span = int((hi - lo + 1).max())
+    window_rem = max(lane, int(np.ceil(span / lane)) * lane)
+    rem_win = (lo // window_rem).astype(np.int32)            # (P, nblk)
+    base = np.repeat(rem_win.astype(np.int64) * window_rem,
+                     rows_per_block, axis=1)                 # (P, shard)
+    lo_rows = np.repeat(lo.astype(np.int64), rows_per_block, axis=1)
+    rem_cols_rel = (
+        np.where(valid.reshape(p, shard, r_rem),
+                 plan.rem_cols.reshape(p, shard, r_rem),
+                 lo_rows[:, :, None]) - base[:, :, None]
+    ).astype(np.int32)
+    rem_own_rel = (lo_rows - base).astype(np.int32)          # diag=0: any
+    assert rem_cols_rel.min() >= 0 and rem_cols_rel.max() < 2 * window_rem
+    need_rem = (int(rem_win.max()) + 2) * window_rem
+
+    def own_fn(diag_l, x_ext, loc_vals_l, loc_cols_l, own_win_l):
+        xp = jnp.pad(x_ext, (0, 2 * window_own - x_ext.shape[0]))
+        return _spmv_call(
+            diag_l, loc_vals_l[0], loc_cols_l[0],
+            jnp.asarray(own_rel_const), own_win_l[0], xp,
+            window=window_own, rows_per_block=rows_per_block,
+            interpret=interpret,
+        )
+
+    def rem_fn(x_copy, rem_vals_l, rem_cols_l, rem_own_l, rem_win_l):
+        ln = x_copy.shape[0]
+        if ln < need_rem:
+            xp = jnp.pad(x_copy, (0, need_rem - ln))
+        else:
+            xp = x_copy[:need_rem]
+        zero_diag = jnp.zeros((shard,), x_copy.dtype)
+        return _spmv_call(
+            zero_diag, rem_vals_l[0], rem_cols_l[0], rem_own_l[0],
+            rem_win_l[0], xp,
+            window=window_rem, rows_per_block=rows_per_block,
+            interpret=interpret,
+        )
+
+    kargs = (loc_vals_s, loc_cols_s, own_win,
+             rem_vals.reshape(p, shard, r_rem), rem_cols_rel,
+             rem_own_rel.reshape(p, shard), rem_win)
+    return own_fn, rem_fn, kargs
 
 
 # --------------------------------------------------------------------------

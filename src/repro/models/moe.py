@@ -24,10 +24,12 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.layers import init_linear
 
-__all__ = ["init_moe", "moe_fwd", "moe_capacity"]
+__all__ = ["init_moe", "moe_fwd", "moe_capacity",
+           "moe_dispatch_pattern", "moe_dispatch_ref", "MoEDispatchGather"]
 
 
 def init_moe(key, cfg, dtype=jnp.float32):
@@ -126,3 +128,158 @@ def moe_fwd(p, x, cfg, *, constrain=None, aux=None):
         return jnp.zeros((t, d), ys.dtype).at[tk].add(ys)
 
     return jax.vmap(combine_one)(y_sorted, tok)           # (G, T, D)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch as the paper's irregular gather (repro.comm consumer)
+# ---------------------------------------------------------------------------
+#
+# The dispatch above rides inside one jitted forward where XLA/GSPMD places
+# the all-to-all.  At *serving* scale the routing of a decoded batch is a
+# static fact between steps: tokens live sharded over devices, experts live
+# sharded over (possibly other) devices, and each expert shard must gather
+# exactly the token vectors routed to it — a fine-grained irregular gather
+# with expert-capacity slots as accessor rows and tokens as the shared
+# vector.  ``MoEDispatchGather`` runs that gather through the same
+# ``CommPlan`` / strategy ladder / §5 models as SpMV and Heat2D.
+
+
+def moe_dispatch_pattern(top_e, num_tokens: int, num_experts: int,
+                         capacity: int, p: int):
+    """Token→expert assignment as an access-pattern index table.
+
+    ``top_e``: (num_tokens, k) expert choices per token.  Accessor row
+    ``e*capacity + c`` reads the c-th token routed to expert e (token-major
+    order, truncated at capacity — the same tokens ``moe_fwd`` keeps).
+    Returns ``(idx (E*C,) int32, valid (E*C,) bool)``; empty slots pad with
+    a token *owned by the expert's shard* so padding costs no communication.
+    """
+    top_e = np.asarray(top_e)
+    assert num_tokens % p == 0 and num_experts % p == 0
+    t_loc, e_loc = num_tokens // p, num_experts // p
+    k = top_e.shape[1]
+    e_flat = top_e.ravel()
+    t_flat = np.repeat(np.arange(num_tokens, dtype=np.int64), k)
+    order = np.argsort(e_flat, kind="stable")     # (e, then token-major)
+    se, st = e_flat[order], t_flat[order]
+    counts = np.bincount(e_flat, minlength=num_experts)
+    seg_start = np.cumsum(counts) - counts
+    pos = np.arange(num_tokens * k) - seg_start[se]
+    keep = pos < capacity
+
+    idx = np.zeros((num_experts, capacity), np.int64)
+    valid = np.zeros((num_experts, capacity), bool)
+    idx[se[keep], pos[keep]] = st[keep]
+    valid[se[keep], pos[keep]] = True
+    # pad empty slots with an owned token id (zero-cost access)
+    own_token = np.repeat(np.arange(p) * t_loc, e_loc * capacity).reshape(
+        num_experts, capacity)
+    idx = np.where(valid, idx, own_token)
+    return idx.reshape(-1).astype(np.int32), valid.reshape(-1)
+
+
+def moe_dispatch_ref(x, idx, valid, num_experts: int, capacity: int):
+    """NumPy ground truth: buf[e, c] = x[idx[e*C+c]] (0 where invalid)."""
+    x = np.asarray(x)
+    out = x[idx] * valid.reshape(-1, *([1] * (x.ndim - 1)))
+    return out.reshape((num_experts, capacity) + x.shape[1:])
+
+
+class MoEDispatchGather:
+    """Expert-capacity-slot gather over sharded tokens via ``repro.comm``.
+
+    Tokens (the shared vector, length ``num_tokens``, optional feature dims)
+    and experts (``num_experts``, ``capacity`` slots each) are both sharded
+    contiguously over ``axis_name``.  Any ladder rung or ``"auto"`` applies;
+    the ``overlap`` rung fills owned-token slots from ``x_local`` while the
+    condensed exchange is in flight (the plan's own/foreign split with
+    r = 1: every slot is either own or foreign).
+    """
+
+    def __init__(self, top_e, num_tokens: int, num_experts: int,
+                 capacity: int, mesh, *, axis_name: str = "data",
+                 strategy: str = "auto", blocksize=None,
+                 shards_per_node=None, hw=None, use_plan_cache: bool = True):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
+        from repro.comm.gather import IrregularGather
+        from repro.comm.pattern import AccessPattern
+        from repro.comm.plan import Topology
+
+        p = int(mesh.shape[axis_name])
+        self.p = p
+        self.num_tokens = num_tokens
+        self.num_experts = num_experts
+        self.capacity = capacity
+        idx, valid = moe_dispatch_pattern(
+            top_e, num_tokens, num_experts, capacity, p)
+        self.idx, self.valid = idx, valid
+        pattern = AccessPattern.from_indices(idx, n=num_tokens)
+        self.gather = IrregularGather(
+            pattern, mesh, axis_name=axis_name, strategy=strategy,
+            blocksize=blocksize,
+            topology=Topology(p, shards_per_node or p), hw=hw,
+            use_plan_cache=use_plan_cache,
+        )
+        self.strategy = self.gather.strategy
+        self.requested_strategy = strategy
+        self.predicted_times = self.gather.predicted_times
+        self.plan = self.gather.plan
+        gather = self.gather
+
+        shard = NamedSharding(mesh, P(axis_name))
+        n = num_tokens
+        if self.strategy == "overlap":
+            plan = self.plan
+            extra = (plan.loc_cols[:, 0], plan.rem_cols[:, 0],
+                     valid.astype(np.float32))
+        else:
+            extra = (idx, valid.astype(np.float32))
+        self._extra_args = tuple(jax.device_put(a, shard) for a in extra)
+
+        def step_local(x_local, *args):
+            gargs = args[:len(gather.plan_args)]
+            rest = args[len(gather.plan_args):]
+            feat = x_local.shape[1:]
+            if self.strategy == "overlap":
+                loc_l, rem_l, valid_l = rest
+                handle = gather.start_local(x_local, *gargs)
+                # own-token slots resolve from x_local while the exchange
+                # flies; padding points at the zero slot appended here
+                x_ext = jnp.concatenate(
+                    [x_local, jnp.zeros((1,) + feat, x_local.dtype)])
+                own = x_ext[loc_l]
+                x_copy = handle.finish(extra_slots=1, copy_own=False)
+                vals = own + x_copy[rem_l]   # each slot is own xor foreign
+            else:
+                idx_l, valid_l = rest
+                x_copy = gather.local(x_local, *gargs)
+                vals = x_copy[idx_l]
+            mask = valid_l.reshape(valid_l.shape + (1,) * len(feat))
+            buf = vals * mask.astype(vals.dtype)
+            e_loc = num_experts // p
+            return buf.reshape((e_loc, capacity) + feat)
+
+        in_specs = ((P(axis_name),) + gather.in_specs
+                    + (P(axis_name),) * len(extra))
+        mapped = compat.shard_map(
+            step_local, mesh=mesh, in_specs=in_specs,
+            out_specs=P(axis_name), check_vma=False)
+
+        @jax.jit
+        def dispatch(x):
+            return mapped(x, *gather.plan_args, *self._extra_args)
+
+        self._dispatch = dispatch
+
+    @property
+    def counts(self):
+        return self.plan.counts
+
+    def shard_tokens(self, x) -> jax.Array:
+        return self.gather.shard_vector(x)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """x: (num_tokens, ...) sharded -> (num_experts, capacity, ...)
+        expert input buffers, sharded over the expert dim."""
+        return self._dispatch(x)

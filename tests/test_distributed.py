@@ -36,6 +36,11 @@ def test_heat2d_distributed_8dev():
     assert "HEAT2D_OK" in out
 
 
+def test_moe_dispatch_gather_8dev():
+    out = _run("check_moe_dispatch.py")
+    assert "MOE_DISPATCH_OK" in out
+
+
 def test_elastic_checkpoint_restore_8dev():
     out = _run("check_elastic_ckpt.py")
     assert "ELASTIC_CKPT_OK" in out

@@ -7,7 +7,6 @@ split or the interior/edge split cannot pass the blocking job.
 """
 import jax
 import numpy as np
-import pytest
 
 from repro.core.heat2d import Heat2D
 from repro.core.matrix import make_mesh_like_matrix, spmv_ref_np
@@ -43,12 +42,42 @@ def test_overlap_heat2d_matches_reference():
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
-def test_overlap_does_not_compose_with_kernel():
+def test_heat2d_auto_enables_split_when_overlap_wins():
+    """strategy="auto" resolving to overlap must actually run the
+    interior/edge split — the §5 model's predicted win exists only if
+    compute is scheduled inside the exchange window."""
+    from repro.core import perfmodel as pm
+
+    ndev = len(jax.devices())
+    shape = (2, ndev // 2) if ndev % 2 == 0 and ndev > 1 else (1, ndev)
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    h = Heat2D(mesh, shape[0] * 16, shape[1] * 16, strategy="auto",
+               hw=pm.ABEL)
+    assert h.overlap == (h.strategy == "overlap")
+    phi = h.init_field(4)
+    got = np.asarray(h.run(phi, 5))
+    want = h.reference(np.asarray(phi), 5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_overlap_composes_with_kernel():
+    """The ladder's fourth rung through the Pallas path: the split-kernel
+    on-copy variant runs the own partial on x_local and the foreign partial
+    on the condensed x_copy, both through the windowed kernel."""
     ndev = len(jax.devices())
     mesh = jax.make_mesh((ndev,), ("data",))
-    m = make_mesh_like_matrix(128 * ndev, 4, seed=0)
-    with pytest.raises(ValueError, match="use_kernel"):
-        DistributedSpMV(m, mesh, strategy="overlap", use_kernel=True)
+    n = 128 * ndev
+    m = make_mesh_like_matrix(n, 4, locality_window=n // 8,
+                              long_range_frac=0.1, seed=0)
+    eng = DistributedSpMV(m, mesh, strategy="overlap", blocksize=32,
+                          use_kernel=True)
+    x = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(eng(eng.shard_vector(x))),
+                               spmv_ref_np(m, x), rtol=2e-4, atol=2e-4)
+
     mesh2 = jax.make_mesh((1, ndev), ("data", "model"))
-    with pytest.raises(ValueError, match="use_kernel"):
-        Heat2D(mesh2, 16, 16 * ndev, overlap=True, use_kernel=True)
+    h = Heat2D(mesh2, 16, 16 * ndev, coef=0.1, overlap=True, use_kernel=True)
+    phi = h.init_field(2)
+    got = np.asarray(h.run(phi, 4))
+    want = h.reference(np.asarray(phi), 4)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
