@@ -138,8 +138,39 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50, smoke=False):
                 f"v3={t['v3_condensed']*1000:.2f}s "
                 f"overlap={t['overlap']*1000:.2f}s per-1000")
 
+    table3_unpack_modes(n=n, r_nz=r_nz, iters=iters, mesh=mesh, m=m,
+                        x_host=x_host, y_ref=y_ref)
     table3_moe_dispatch(smoke=smoke, iters=iters)
     return results
+
+
+# --------------------------------------------------------------------------
+# Table 3c: the two unpack modes on the condensed rung — the paper's
+# assemble-x_copy layout vs the Destination-targeted delivery, each priced
+# by its own §5 term (docs/perf_model.md eqs. 14'/15')
+# --------------------------------------------------------------------------
+
+def table3_unpack_modes(*, n, r_nz, iters, mesh, m, x_host, y_ref):
+    from repro.comm import select
+    from repro.core import tune
+
+    print("# table3 unpack: condensed rung, full x_copy assembly vs "
+          "Destination-targeted delivery (per-mode §5 prediction)")
+    hw = tune.measure_hardware(mesh, "data")
+    for mode in ("full", "dest"):
+        eng = DistributedSpMV(m, mesh, strategy="condensed",
+                              blocksize=n // 8 // 16, shards_per_node=1,
+                              materialize=mode)
+        x = eng.shard_vector(x_host)
+        np.testing.assert_allclose(np.asarray(eng(x)), y_ref, rtol=2e-4,
+                                   atol=2e-4)
+        t = timeit(eng, x, iters=iters)
+        t_pred = dict(select.rank_strategies(
+            eng.plan, r_nz, hw, materialize=mode))["condensed"]
+        acc = min(t, t_pred) / max(t, t_pred)
+        csv_row(f"table3.unpack.{mode}", t * 1e6,
+                f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
+                f"dest_slots={eng.plan.dest_len}")
 
 
 # --------------------------------------------------------------------------
@@ -281,26 +312,34 @@ def table5_heat2d(big_m=512, big_n=1024, steps=100, smoke=False):
     # halo message pays the calibrated per-message tau
     w = pm.Heat2DWorkload(big_m=big_m, big_n=big_n, mprocs=2, nprocs=4,
                           topology=Topology(8, 1))
-    pred = pm.predict_heat2d(w, hw, steps=steps)
-    total_pred = pred["halo"] + pred["comp"]
 
+    # the eqs.(19)-(21) halo model prices the paper's in-place O(halo)
+    # unpack — exactly what materialize="dest" runs; the "full" mode
+    # additionally assembles the length-n x_copy each step (docs/
+    # perf_model.md eq. 15'), priced by the model's materialize knob
     t_base = None
-    for overlap in (False, True):
-        h = Heat2D(mesh, big_m, big_n, coef=0.1, overlap=overlap)
+    for mode in ("dest", "full"):
+        h = Heat2D(mesh, big_m, big_n, coef=0.1, materialize=mode)
         phi = h.init_field(0)
         t = timeit(lambda p: h.run(p, steps), phi, iters=3, warmup=1)
-        if not overlap:
+        pred_mode = pm.predict_heat2d(w, hw, steps=steps, materialize=mode)
+        t_pred = pred_mode["halo"] + pred_mode["comp"]
+        acc = min(t, t_pred) / max(t, t_pred)
+        name = "table5.heat2d" if mode == "dest" else "table5.heat2d_full"
+        csv_row(name, t * 1e6,
+                f"unpack={mode} predicted_us={t_pred*1e6:.0f} "
+                f"(halo={pred_mode['halo']*1e6:.0f} "
+                f"comp={pred_mode['comp']*1e6:.0f}) "
+                f"accuracy={acc:.2f}")
+        if mode == "dest":
             t_base = t
-            acc = min(t, total_pred) / max(t, total_pred)
-            csv_row("table5.heat2d", t * 1e6,
-                    f"predicted_us={total_pred*1e6:.0f} "
-                    f"(halo={pred['halo']*1e6:.0f} "
-                    f"comp={pred['comp']*1e6:.0f}) "
-                    f"accuracy={acc:.2f}")
-        else:
-            csv_row("table5.heat2d_overlap", t * 1e6,
-                    f"vs_base={t/t_base:.2f}x "
-                    "(interior/edge split so halo exchange can overlap)")
+
+    h = Heat2D(mesh, big_m, big_n, coef=0.1, overlap=True)
+    phi = h.init_field(0)
+    t = timeit(lambda p: h.run(p, steps), phi, iters=3, warmup=1)
+    csv_row("table5.heat2d_overlap", t * 1e6,
+            f"vs_base={t/t_base:.2f}x "
+            "(interior/edge split so halo exchange can overlap)")
 
 
 # --------------------------------------------------------------------------

@@ -35,6 +35,9 @@ def main():
     mesh = compat.make_mesh((2, 4), ("data", "model"),
                             axis_types=compat.auto_axis_types(2))
     big_m, big_n, steps = 1024, 2048, 200
+    # default materialize="dest": the halo exchange lands straight in the
+    # four named strips (up/down/left/right Destination slots) — O(halo)
+    # unpack per step, no big_m*big_n x_copy ever assembled
     h = Heat2D(mesh, big_m, big_n, coef=0.1)
     phi = h.init_field(0)
 
@@ -44,16 +47,24 @@ def main():
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
     print("distributed heat2d matches sequential stencil ✓")
 
-    jax.block_until_ready(h.run(phi, steps))
-    t0 = time.perf_counter()
-    jax.block_until_ready(h.run(phi, steps))
-    dt = time.perf_counter() - t0
+    def timed(solver):
+        jax.block_until_ready(solver.run(phi, steps))
+        t0 = time.perf_counter()
+        jax.block_until_ready(solver.run(phi, steps))
+        return time.perf_counter() - t0
+
+    dt = timed(h)
+    # the paper's layout for comparison: assemble the full-length copy,
+    # then index the strips out of it (bit-identical results)
+    dt_full = timed(Heat2D(mesh, big_m, big_n, coef=0.1,
+                           materialize="full"))
 
     hw = calibrate_host()
     w = Heat2DWorkload(big_m=big_m, big_n=big_n, mprocs=2, nprocs=4,
                        topology=Topology(8, 8))
     pred = predict_heat2d(w, hw, steps=steps)
-    print(f"{steps} steps on 2x4 grid: measured {dt:.3f}s, "
+    print(f"{steps} steps on 2x4 grid: measured {dt:.3f}s targeted-unpack "
+          f"({dt_full:.3f}s with full x_copy assembly), "
           f"predicted {pred['halo'] + pred['comp']:.3f}s "
           f"(halo {pred['halo']:.3f} + comp {pred['comp']:.3f})")
 

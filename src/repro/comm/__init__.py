@@ -8,13 +8,23 @@ persistently cached), picks a ladder rung (§4) by hand or by the §5 models
 gather and ``shard_map``-local functions — including the ``OverlapHandle``
 start/compute/finish protocol that generalizes the own/foreign split.
 
+A ``Destination`` descriptor names *where* gathered values land (halo
+strips, EllPack slots, expert-capacity rows): with one attached, every
+strategy's ``finish`` scatters the landed recv buffer straight into the
+consumer's named slots — O(slots + recv) work — instead of assembling the
+O(n) full-length private copy (still available via
+``finish(materialize="full")``).
+
 Consumers: ``repro.core.spmv`` (the paper's workload), ``repro.core.heat2d``
-(§8 stencil halos), ``repro.models.moe`` (token→expert dispatch).
+(§8 stencil halos), ``repro.models.moe`` (token→expert dispatch).  See
+``docs/comm_api.md`` for the API walkthrough and ``docs/perf_model.md`` for
+the paper-formula-to-code map.
 """
-from repro.comm.pattern import AccessPattern
+from repro.comm.pattern import AccessPattern, Destination
 from repro.comm.shared import SharedVector
 from repro.comm.plan import (CommPlan, GatherCounts, Topology,
-                             build_comm_plan, blockwise_block_counts)
+                             attach_destination, build_comm_plan,
+                             blockwise_block_counts)
 from repro.comm.plan_cache import get_comm_plan
 from repro.comm.strategies import STRATEGIES
 from repro.comm.gather import IrregularGather, OverlapHandle
@@ -22,9 +32,10 @@ from repro.comm import plan, plan_cache, pattern, shared, strategies, select
 from repro.comm import gather
 
 __all__ = [
-    "AccessPattern", "SharedVector", "IrregularGather", "OverlapHandle",
-    "CommPlan", "GatherCounts", "Topology", "build_comm_plan",
-    "blockwise_block_counts", "get_comm_plan", "STRATEGIES",
+    "AccessPattern", "Destination", "SharedVector", "IrregularGather",
+    "OverlapHandle", "CommPlan", "GatherCounts", "Topology",
+    "attach_destination", "build_comm_plan", "blockwise_block_counts",
+    "get_comm_plan", "STRATEGIES",
     "plan", "plan_cache", "pattern", "shared", "strategies", "select",
     "gather",
 ]

@@ -31,9 +31,19 @@ Consumers compose it two ways:
   scheduled between ``start_local`` and ``finish`` that does not consume the
   collective's result.
 
+With a ``Destination`` descriptor (named consumer slots — halo strips,
+EllPack rows, expert-capacity slots), ``finish()`` / ``local()`` default to
+``materialize="dest"``: the landed recv buffer is scattered straight into
+the named slots and returned as ``{name: slot_array}`` — O(slots + recv)
+work, no full-length ``x_copy`` ever assembled.  ``materialize="full"``
+keeps the classic assembled copy on the same gather, bit-identically, and
+``strategy="auto"`` prices whichever unpack the consumer will actually run
+(the §5 extension in docs/perf_model.md).
+
 The shared vector may carry trailing feature dimensions (token embeddings,
 stacked right-hand sides): strategies move whole feature rows and all §5
-volumes scale by the feature width.
+volumes scale by the feature width.  See docs/comm_api.md for runnable
+walkthroughs of every surface.
 """
 from __future__ import annotations
 
@@ -47,7 +57,7 @@ from repro import compat
 from repro.comm import plan_cache
 from repro.comm import select
 from repro.comm import strategies as strat
-from repro.comm.pattern import AccessPattern
+from repro.comm.pattern import AccessPattern, Destination
 from repro.comm.plan import CommPlan, Topology
 from repro.comm.shared import SharedVector, axis_size
 
@@ -56,24 +66,38 @@ __all__ = ["IrregularGather", "OverlapHandle"]
 
 @dataclasses.dataclass
 class OverlapHandle:
-    """An in-flight gather: the collective has been issued, the private copy
-    is not yet assembled.  Everything computed before ``finish`` that only
-    reads ``x_local`` runs inside the communication window."""
+    """An in-flight gather: the collective has been issued, the landed
+    messages are not yet delivered.  Everything computed before ``finish``
+    that only reads ``x_local`` runs inside the communication window.
+
+    ``finish`` has two materializations:
+
+    * ``materialize="full"`` — assemble the classic device-private
+      ``x_copy`` (length >= n, indexable with global indices);
+    * ``materialize="dest"`` — requires the gather to own a ``Destination``:
+      scatter the landed recv buffer straight into the consumer's named
+      slots and return ``{name: (slot_shape..., feat...) array}``.  No
+      full-length intermediate is built — O(slots + recv) work.
+
+    The default is ``"dest"`` when the gather was constructed with a
+    ``Destination``, else ``"full"``.
+    """
 
     x_local: jax.Array
     _finish: Callable[..., jax.Array]
 
-    def finish(self, *, extra_slots: int = 0,
-               copy_own: bool = True) -> jax.Array:
-        """Assemble x_copy from the landed messages.
+    def finish(self, *, extra_slots: int = 0, copy_own: bool = True,
+               materialize: str | None = None):
+        """Deliver the landed messages (see class docstring for modes).
 
-        ``extra_slots``: number of guaranteed-zero slots appended after the
-        recv dump — x_copy[n+1 .. n+extra_slots] read as 0 for any strategy,
-        so consumers can point their padding indices there.
-        ``copy_own=False`` skips the eq.-14 own-shard memcpy for consumers
-        that read their own shard from ``x_local`` directly.
+        ``extra_slots`` (full mode): number of guaranteed-zero slots
+        appended after the recv dump — x_copy[n+1 .. n+extra_slots] read as
+        0 for any strategy, so consumers can point padding indices there.
+        ``copy_own=False`` (full mode) skips the eq.-14 own-shard memcpy for
+        consumers that read their own shard from ``x_local`` directly.
         """
-        return self._finish(extra_slots=extra_slots, copy_own=copy_own)
+        return self._finish(extra_slots=extra_slots, copy_own=copy_own,
+                            materialize=materialize)
 
 
 def _measure_hw(mesh, axis_name):
@@ -99,10 +123,20 @@ class IrregularGather:
         blocksize: int | str | None = None,
         shards_per_node: int | None = None,
         topology: Topology | None = None,
+        destination: Destination | None = None,
+        dest_slots: int | None = None,
         hw=None,
         candidates=None,
         use_plan_cache: bool = True,
     ):
+        """``destination`` may be a ``Destination`` or a callable
+        ``(resolved_strategy, base_plan) -> Destination`` for consumers
+        whose slot layout depends on the resolved rung (e.g. SpMV targets
+        foreign slots only under ``overlap``); it is materialized and
+        attached once, after strategy resolution, so no throwaway plan
+        entry is ever cached.  ``dest_slots`` is the flattened slot count
+        the auto ranking prices when ``destination`` is a callable (a
+        plain ``Destination`` knows its own)."""
         if isinstance(where, SharedVector):
             assert where.n == pattern.n, (where.n, pattern.n)
             mesh = where.mesh
@@ -129,7 +163,10 @@ class IrregularGather:
                 hw = _measure_hw(mesh, axis_name)
             blocksize = select.choose_blocksize(
                 pattern.indices, n, p, topology=topology, hw=hw)
-        self.plan: CommPlan = plan_cache.get_comm_plan(
+        # destination-independent base plan first: the strategy resolves
+        # against it, and the (possibly strategy-dependent) destination is
+        # attached only afterwards — exactly one dest-keyed cache entry
+        base_plan: CommPlan = plan_cache.get_comm_plan(
             pattern.indices, n, p, blocksize=blocksize, topology=topology,
             cache=use_plan_cache,
         )
@@ -139,25 +176,64 @@ class IrregularGather:
         if strategy == "auto":
             if hw is None:
                 hw = _measure_hw(mesh, axis_name)
-            ranked = select.rank_strategies(self.plan, pattern.r, hw,
-                                            candidates=candidates)
+            # with a destination, price the targeted O(slots + recv) unpack
+            # instead of the O(n) full-copy assembly (§5 + the new term)
+            if destination is None:
+                price_mode, price_slots = None, None
+            else:
+                price_mode = "dest"
+                if callable(destination):
+                    if dest_slots is None:
+                        raise ValueError(
+                            'strategy="auto" with a callable destination '
+                            "requires dest_slots= — the flattened slot "
+                            "count the ranking prices (otherwise the "
+                            "targeted unpack would be priced at 0 slots "
+                            "and skew the rung selection)")
+                    price_slots = dest_slots
+                else:
+                    price_slots = destination.num_slots
+            ranked = select.rank_strategies(
+                base_plan, pattern.r, hw, candidates=candidates,
+                materialize=price_mode, dest_slots=price_slots)
             self.predicted_times = dict(ranked)
             strategy = ranked[0][0]
         self.strategy = strategy
         self.hw = hw
 
+        if callable(destination):
+            destination = destination(strategy, base_plan)
+        if destination is not None:
+            assert destination.p == p, (
+                f"destination has {destination.p} per-device slot tables "
+                f"for a {p}-shard mesh axis")
+            assert destination.indices.max() < n, (
+                "destination indices must lie in [-1, n)")
+            self.plan: CommPlan = plan_cache.get_comm_plan(
+                pattern.indices, n, p, blocksize=blocksize,
+                topology=topology, destination=destination,
+                base=base_plan, cache=use_plan_cache,
+            )
+        else:
+            self.plan = base_plan
+        self.destination = destination
+
+        with_dest = destination is not None
         shard = NamedSharding(mesh, P(axis_name))
-        self.in_specs = strat.gather_in_specs(strategy, axis_name)
+        self.in_specs = strat.gather_in_specs(strategy, axis_name,
+                                              with_dest=with_dest)
         self.plan_args = tuple(
             jax.device_put(a, shard)
-            for a in strat.plan_device_args(self.plan, strategy)
+            for a in strat.plan_device_args(self.plan, strategy,
+                                            with_dest=with_dest)
         )
-        self._local = strat.make_gather_local(self.plan, strategy, axis_name)
         self._start, self._finish = strat.make_start_local(
             self.plan, strategy, axis_name)
 
         def gather_only_local(x_local, *plan_args):
-            return self._local(x_local, *plan_args)[None]
+            recv = self._start(x_local, *plan_args)
+            return self._finish(recv, x_local, *plan_args,
+                                materialize="full")[None]
 
         self._gather_all = jax.jit(compat.shard_map(
             gather_only_local,
@@ -167,30 +243,64 @@ class IrregularGather:
             check_vma=False,
         ))
 
+    def _resolve_materialize(self, materialize: str | None) -> str:
+        if materialize is None:
+            return "dest" if self.destination is not None else "full"
+        if materialize == "dest" and self.destination is None:
+            raise ValueError(
+                'materialize="dest" requires constructing the gather with '
+                "a Destination descriptor")
+        if materialize not in ("dest", "full"):
+            raise ValueError(f"unknown materialize mode {materialize!r}")
+        return materialize
+
     # ---- shard_map-local surface (compose inside a consumer's step) ----
-    def local(self, x_local: jax.Array, *plan_args) -> jax.Array:
-        """One-shot local gather: x_local (shard, ...) -> x_copy (>=n, ...)."""
-        return self._local(x_local, *plan_args)
+    def local(self, x_local: jax.Array, *plan_args,
+              materialize: str | None = None):
+        """One-shot local gather.
+
+        ``materialize="full"`` (default without a destination): x_local
+        (shard, ...) -> x_copy (>= n, ...).  ``materialize="dest"`` (default
+        with one): -> ``{name: slots}`` named consumer buffers, no
+        full-length intermediate.
+        """
+        mode = self._resolve_materialize(materialize)
+        recv = self._start(x_local, *plan_args)
+        out = self._finish(recv, x_local, *plan_args, materialize=mode)
+        if mode == "dest":
+            return self.destination.split_local(out)
+        return out
 
     def start_local(self, x_local: jax.Array, *plan_args) -> OverlapHandle:
         """Issue the exchange; compute on ``x_local`` while it flies."""
         in_flight = self._start(x_local, *plan_args)
 
-        def finish(*, extra_slots=0, copy_own=True):
-            return self._finish(in_flight, x_local, *plan_args,
-                                extra_slots=extra_slots, copy_own=copy_own)
+        def finish(*, extra_slots=0, copy_own=True, materialize=None):
+            mode = self._resolve_materialize(materialize)
+            out = self._finish(in_flight, x_local, *plan_args,
+                               extra_slots=extra_slots, copy_own=copy_own,
+                               materialize=mode)
+            if mode == "dest":
+                return self.destination.split_local(out)
+            return out
 
         return OverlapHandle(x_local=x_local, _finish=finish)
 
     # ---- standalone surface ----
     def shard_vector(self, x) -> jax.Array:
+        """Place host values on the mesh in the plan's contiguous layout."""
         return jax.device_put(
             x, NamedSharding(self.mesh, P(self.axis_name)))
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        """(P, >=n, ...) array: row q is device q's private x_copy."""
+        """(P, >=n, ...) array: row q is device q's private x_copy.
+
+        Always the full materialization (tests and simple pipelines want
+        the global-indexable copy), regardless of any ``Destination``.
+        """
         return self._gather_all(x, *self.plan_args)
 
     @property
     def counts(self):
+        """The plan's exact per-shard volume counts (§5.2 model inputs)."""
         return self.plan.counts

@@ -14,7 +14,7 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["AccessPattern"]
+__all__ = ["AccessPattern", "Destination"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,3 +99,96 @@ class AccessPattern:
         order = np.argsort(own.ravel(), kind="stable")
         idx = np.stack([nb.ravel()[order] for nb in nbrs], axis=1)
         return cls.from_indices(idx.astype(np.int32), n=big_m * big_n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Destination:
+    """Named consumer slots that gathered values land in directly.
+
+    The paper's UPCv3 unpack scatters each landed message into a full-length
+    private copy (``mythread_x_copy``) — O(n) buffer work per exchange even
+    when the consumer only reads O(halo) foreign values.  A ``Destination``
+    instead *names* where each device wants values delivered: halo strips,
+    EllPack slots, expert-capacity rows — any set of named arrays of global
+    indices, one table per device.  The planner precomputes, per strategy, a
+    recv-buffer→slot gather so ``OverlapHandle.finish()`` writes the landed
+    messages straight into the named buffers, never materializing ``x_copy``
+    (which stays available behind ``finish(materialize="full")``).
+
+    ``indices`` is ``(p, L)`` int32: device q's flattened slot table, holding
+    the *global* vector index each slot reads.  The sentinel ``Destination.
+    ZERO`` (-1) marks slots that must read exactly 0.0 (out-of-domain halo
+    cells, padding).  Every non-sentinel foreign index must appear in the
+    ``AccessPattern`` the plan was built from — the planner raises otherwise,
+    because that value would never arrive.
+
+    >>> import numpy as np
+    >>> d = Destination.from_slots(
+    ...     up=np.array([[4, 5], [0, 1]]),     # 2 devices x 2 slots
+    ...     left=np.array([[6], [-1]]))        # -1: guaranteed-zero slot
+    >>> d.names, d.num_slots
+    (('up', 'left'), 3)
+    >>> d.split_local(np.array([10., 11., 12.]))['up']
+    array([10., 11.])
+    """
+
+    names: tuple[str, ...]
+    shapes: tuple[tuple[int, ...], ...]  # per-device slot-array shapes
+    indices: np.ndarray                  # (p, L) int32 global ids; -1 -> 0.0
+
+    ZERO = -1
+
+    def __post_init__(self):
+        idx = np.asarray(self.indices)
+        assert idx.ndim == 2, f"indices must be (p, L), got {idx.shape}"
+        assert idx.dtype == np.int32, "indices must be int32"
+        assert len(self.names) == len(self.shapes)
+        total = sum(int(np.prod(s)) for s in self.shapes)
+        assert total == idx.shape[1], (total, idx.shape[1])
+        assert idx.min() >= self.ZERO, "indices must be >= -1 (ZERO sentinel)"
+
+    @classmethod
+    def from_slots(cls, **slots) -> "Destination":
+        """Build from named per-device global-index tables.
+
+        Each value is an ``(p, *slot_shape)`` integer array; entries equal to
+        ``Destination.ZERO`` (-1) read as exactly 0.0.  Slot order follows
+        keyword order, which is also the order ``split_local`` returns.
+        """
+        assert slots, "at least one named slot table required"
+        names = tuple(slots)
+        arrays = [np.asarray(slots[k]) for k in names]
+        p = arrays[0].shape[0]
+        assert all(a.shape[0] == p for a in arrays), (
+            "every slot table needs the same leading device dim")
+        shapes = tuple(a.shape[1:] for a in arrays)
+        flat = np.concatenate([a.reshape(p, -1) for a in arrays], axis=1)
+        return cls(names=names, shapes=shapes,
+                   indices=np.ascontiguousarray(flat, dtype=np.int32))
+
+    @property
+    def p(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def num_slots(self) -> int:
+        """Flattened slots per device (the O(L) the targeted unpack pays)."""
+        return self.indices.shape[1]
+
+    def split_local(self, flat):
+        """Split one device's flat ``(L, ...)`` buffer back into named slot
+        arrays (works on numpy and traced jnp values alike)."""
+        out, off = {}, 0
+        for name, shape in zip(self.names, self.shapes):
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            out[name] = flat[off:off + size].reshape(
+                tuple(shape) + flat.shape[1:])
+            off += size
+        return out
+
+    def key_bytes(self) -> bytes:
+        """Content bytes for the plan-cache key."""
+        head = "|".join(
+            f"{n}:{','.join(map(str, s))}"
+            for n, s in zip(self.names, self.shapes)).encode()
+        return head + b"#" + np.ascontiguousarray(self.indices).tobytes()

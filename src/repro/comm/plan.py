@@ -36,7 +36,7 @@ import dataclasses
 import numpy as np
 
 __all__ = ["Topology", "GatherCounts", "CommPlan", "build_comm_plan",
-           "blockwise_block_counts"]
+           "blockwise_block_counts", "attach_destination"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +133,22 @@ class CommPlan:
 
     counts: GatherCounts
 
+    # --- consumer-targeted unpack (optional ``Destination`` descriptor) ---
+    # Precomputed recv-buffer -> consumer-slot gathers so ``finish`` can land
+    # messages straight in the consumer's named buffers (O(L) slots) instead
+    # of assembling the full-length x_copy.  All arrays are (P, L); each slot
+    # is exactly one of {owned, foreign, zero}: ``dest_own_idx`` reads
+    # x_local, ``dest_cond_src`` / ``dest_blk_src`` read the flattened
+    # condensed / blockwise recv buffer, ``dest_global_idx`` reads the
+    # replicate all-gather; the two int8 masks zero out the other source.
+    dest_len: int = 0
+    dest_own_idx: np.ndarray | None = None    # (P, L) int32 into x_local
+    dest_own_mask: np.ndarray | None = None   # (P, L) int8, 1 where owned
+    dest_rem_mask: np.ndarray | None = None   # (P, L) int8, 1 where foreign
+    dest_cond_src: np.ndarray | None = None   # (P, L) int32 into (P*s_max)
+    dest_blk_src: np.ndarray | None = None    # (P, L) into (P*b_max*BS)
+    dest_global_idx: np.ndarray | None = None  # (P, L) int32 global ids
+
     @property
     def nblks(self) -> int:
         return self.n // self.blocksize
@@ -177,6 +193,81 @@ def blockwise_block_counts(
     return b_local, b_remote
 
 
+def attach_destination(plan: CommPlan, destination) -> CommPlan:
+    """Precompute the recv→slot gathers for one ``Destination`` descriptor.
+
+    ``destination`` is a ``repro.comm.pattern.Destination`` (anything with a
+    ``(P, L)`` int ``indices`` table; sentinel -1 = deliver exactly 0.0).
+    For each device the L slots are classified owned / foreign / zero, and
+    each foreign slot is resolved to its position in the landed condensed
+    recv buffer ``(P, s_max)`` and blockwise recv buffer ``(P, b_max, BS)``.
+    Raises ``ValueError`` if a foreign slot's global id is not part of the
+    plan's access pattern — that value would never be exchanged.
+
+    Returns a new ``CommPlan`` with the ``dest_*`` fields populated; the
+    plan cache stores the combined (pattern, destination) entry under its
+    own content key (format v3).
+    """
+    dest_idx = np.asarray(destination.indices)
+    p, L = dest_idx.shape
+    assert p == plan.p, (p, plan.p)
+    shard_size = plan.shard_size
+    n = plan.n
+
+    g = dest_idx.astype(np.int64)
+    zero = g < 0
+    owner = np.where(zero, 0, g) // shard_size
+    own = (~zero) & (owner == np.arange(p)[:, None])
+    rem = (~zero) & ~own
+
+    own_idx = np.where(
+        own, g - (np.arange(p) * shard_size)[:, None], 0).astype(np.int32)
+    cond_src = np.zeros((p, L), np.int32)
+    blk_src = np.zeros((p, L), np.int32)
+    bs = plan.blocksize
+    for q in range(p):
+        gq = g[q][rem[q]]
+        if not len(gq):
+            continue
+        # condensed: position of each foreign id in the landed (P, s_max)
+        rg = plan.recv_global_idx[q].ravel()
+        valid = np.flatnonzero(rg != n)
+        order = np.argsort(rg[valid], kind="stable")
+        sorted_ids, flat_pos = rg[valid][order], valid[order]
+        loc = np.searchsorted(sorted_ids, gq)
+        hit = np.zeros(len(gq), bool)
+        inb = loc < len(sorted_ids)
+        hit[inb] = sorted_ids[loc[inb]] == gq[inb]
+        if not hit.all():
+            missing = np.unique(gq[~hit])[:8]
+            raise ValueError(
+                f"destination slot(s) on shard {q} read global ids "
+                f"{missing.tolist()} that the access pattern never "
+                "gathers — every foreign destination index must appear "
+                "in the AccessPattern the plan was built from")
+        cond_src[q][rem[q]] = flat_pos[loc]
+        # blockwise: whole blocks land; position = block slot * BS + offset
+        rb = plan.recv_global_blk[q].ravel()
+        bvalid = np.flatnonzero(rb != plan.nblks)
+        border = np.argsort(rb[bvalid], kind="stable")
+        sorted_blk, blk_pos = rb[bvalid][border], bvalid[border]
+        bloc = np.searchsorted(sorted_blk, gq // bs)
+        assert (sorted_blk[np.minimum(bloc, len(sorted_blk) - 1)]
+                == gq // bs).all(), "block plan missing a needed block"
+        blk_src[q][rem[q]] = (blk_pos[bloc] * bs + gq % bs).astype(np.int32)
+
+    return dataclasses.replace(
+        plan,
+        dest_len=L,
+        dest_own_idx=own_idx,
+        dest_own_mask=own.astype(np.int8),
+        dest_rem_mask=rem.astype(np.int8),
+        dest_cond_src=cond_src,
+        dest_blk_src=blk_src,
+        dest_global_idx=np.where(zero, 0, g).astype(np.int32),
+    )
+
+
 def build_comm_plan(
     cols: np.ndarray,
     n: int,
@@ -184,6 +275,7 @@ def build_comm_plan(
     *,
     blocksize: int | None = None,
     topology: Topology | None = None,
+    destination=None,
 ) -> CommPlan:
     """One-time preparation step (paper §4.3.1).
 
@@ -350,7 +442,7 @@ def build_comm_plan(
         padded_blockwise_per_shard=p * b_max * blocksize,
     )
 
-    return CommPlan(
+    plan = CommPlan(
         n=n,
         p=p,
         shard_size=shard_size,
@@ -373,3 +465,6 @@ def build_comm_plan(
         rem_src=rem_src,
         counts=counts,
     )
+    if destination is not None:
+        plan = attach_destination(plan, destination)
+    return plan

@@ -29,25 +29,41 @@ import dataclasses
 import hashlib
 import os
 import tempfile
+import warnings
 
 import numpy as np
 
-from repro.comm.plan import CommPlan, GatherCounts, Topology, build_comm_plan
+from repro.comm.plan import (CommPlan, GatherCounts, Topology,
+                             attach_destination, build_comm_plan)
 
 __all__ = ["plan_key", "get_comm_plan", "clear_memory_cache", "stats",
-           "CacheStats", "cache_dir"]
+           "CacheStats", "cache_dir", "StalePlanCacheError"]
 
 # Bump when the CommPlan field set/serialization changes OR when
 # build_comm_plan's output semantics change for the same inputs (planner bug
 # fixes included) — the version participates in the content key, so bumping
 # invalidates every stale on-disk entry.
 # v2: accessor-row count ``m`` decoupled from vector length ``n``.
-_FORMAT_VERSION = 2
+# v3: optional ``Destination`` descriptor (consumer-targeted unpack arrays
+#     ``dest_*``); the destination content participates in the key.
+_FORMAT_VERSION = 3
 
 # fields serialized verbatim as arrays
 _PLAN_ARRAYS = ("send_counts", "send_local_idx", "recv_global_idx",
                 "send_block_counts", "send_local_blk", "recv_global_blk",
                 "loc_cols", "loc_src", "rem_cols", "rem_src")
+# destination arrays, present only when the plan was built with one
+_DEST_ARRAYS = ("dest_own_idx", "dest_own_mask", "dest_rem_mask",
+                "dest_cond_src", "dest_blk_src", "dest_global_idx")
+
+
+class StalePlanCacheError(ValueError):
+    """An on-disk plan entry uses an older format than this build writes.
+
+    Raised by ``_deserialize`` and converted into a rebuild (with a visible
+    warning) by the cache lookup — a stale entry must never be silently
+    reinterpreted as current-format garbage.
+    """
 _COUNT_ARRAYS = ("c_local_indv", "c_remote_indv", "b_local", "b_remote",
                  "s_local_out", "s_remote_out", "s_local_in", "s_remote_in",
                  "c_remote_out")
@@ -105,39 +121,108 @@ def _max_disk_bytes() -> int:
     return int(os.environ.get("REPRO_PLAN_CACHE_MAX_BYTES", 256 << 20))
 
 
-def plan_key(
-    cols: np.ndarray, n: int, p: int, blocksize: int, topology: Topology
+def _key_for_version(
+    version: int, cols: np.ndarray, n: int, p: int, blocksize: int,
+    topology: Topology, destination=None,
 ) -> str:
-    """Content hash of every input ``build_comm_plan`` depends on."""
     cols = np.ascontiguousarray(np.asarray(cols, dtype=np.int32))
     h = hashlib.sha256()
-    h.update(f"v{_FORMAT_VERSION}|{n}|{p}|{blocksize}|"
+    h.update(f"v{version}|{n}|{p}|{blocksize}|"
              f"{topology.num_shards}|{topology.shards_per_node}|"
              f"{cols.shape}".encode())
     h.update(cols.tobytes())
+    if destination is not None:
+        h.update(b"|dest|")
+        h.update(destination.key_bytes())
     return h.hexdigest()
 
 
-def _serialize(plan: CommPlan) -> dict[str, np.ndarray]:
-    out = {name: getattr(plan, name) for name in _PLAN_ARRAYS}
-    for name in _COUNT_ARRAYS:
-        out[f"counts.{name}"] = getattr(plan.counts, name)
+def plan_key(
+    cols: np.ndarray, n: int, p: int, blocksize: int, topology: Topology,
+    destination=None,
+) -> str:
+    """Content hash of every input ``build_comm_plan`` depends on.
+
+    A plan built with a ``Destination`` descriptor hashes the destination
+    content too, so the same access pattern with different consumer slot
+    tables yields distinct cache entries.
+    """
+    return _key_for_version(_FORMAT_VERSION, cols, n, p, blocksize,
+                            topology, destination)
+
+
+# On-disk formats this build knows how to *recognize* (not read): their
+# version prefix participated in the content key, so a newer build would
+# otherwise never open them and the orphans would silently count against
+# REPRO_PLAN_CACHE_MAX_BYTES forever.
+_LEGACY_VERSIONS = (2,)
+
+
+def _evict_stale_entries(cols, n, p, blocksize, topology) -> None:
+    """Surface + remove pre-v3 entries for this exact plan input.
+
+    A v2-era build stored this plan under the v2-prefixed content key;
+    probe those filenames so a genuine upgrade gets the explicit migration
+    warning and the stale file is deleted rather than orphaned.
+    """
+    for old in _LEGACY_VERSIONS:
+        path = _disk_path(_key_for_version(old, cols, n, p, blocksize,
+                                           topology))
+        if os.path.exists(path):
+            warnings.warn(
+                f"plan-cache entry {os.path.basename(path)} was written by "
+                f"a v{old}-format build; this build reads "
+                f"v{_FORMAT_VERSION} (v3 added the Destination "
+                "targeted-unpack arrays) — the stale entry is deleted and "
+                "the plan rebuilt", stacklevel=3)
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+
+
+def _serialize(plan: CommPlan,
+               base_key: str | None = None) -> dict[str, np.ndarray]:
+    """Entry payload.  A destination-keyed plan with a ``base_key`` is
+    stored as a *delta*: only the O(L) ``dest_*`` arrays plus a reference
+    to the destination-free base entry — the O(nnz) base arrays are never
+    duplicated on disk per destination."""
+    if plan.dest_len and base_key is not None:
+        out = {name: getattr(plan, name) for name in _DEST_ARRAYS}
+        out["base_key"] = np.frombuffer(
+            base_key.encode("ascii"), dtype=np.uint8).copy()
+    else:
+        out = {name: getattr(plan, name) for name in _PLAN_ARRAYS}
+        for name in _COUNT_ARRAYS:
+            out[f"counts.{name}"] = getattr(plan.counts, name)
+        if plan.dest_len:
+            for name in _DEST_ARRAYS:
+                out[name] = getattr(plan, name)
     meta = np.array(
         [_FORMAT_VERSION, plan.n, plan.p, plan.shard_size, plan.blocksize,
          plan.topology.num_shards, plan.topology.shards_per_node,
          plan.s_max, plan.b_max, plan.r_loc_max, plan.r_rem_max]
         + [getattr(plan.counts, name) for name in _COUNT_SCALARS]
-        + [plan.m],
+        + [plan.m, plan.dest_len],
         dtype=np.int64,
     )
     out["meta"] = meta
     return out
 
 
+def _check_version(meta) -> None:
+    found = int(meta[0])
+    if found != _FORMAT_VERSION:
+        raise StalePlanCacheError(
+            f"plan-cache entry has format v{found} but this build reads "
+            f"v{_FORMAT_VERSION} (v3 added the Destination targeted-unpack "
+            f"arrays); the entry is ignored and the plan rebuilt — delete "
+            f"{cache_dir()} to clear stale entries")
+
+
 def _deserialize(data) -> CommPlan:
     meta = data["meta"]
-    if int(meta[0]) != _FORMAT_VERSION:
-        raise ValueError("stale plan-cache format")
+    _check_version(meta)
     topo = Topology(num_shards=int(meta[5]), shards_per_node=int(meta[6]))
     counts = GatherCounts(
         **{name: np.asarray(data[f"counts.{name}"]) for name in _COUNT_ARRAYS},
@@ -145,12 +230,15 @@ def _deserialize(data) -> CommPlan:
         padded_condensed_per_shard=int(meta[12]),
         padded_blockwise_per_shard=int(meta[13]),
     )
+    dest_len = int(meta[15])
+    dest = {name: np.asarray(data[name]) for name in _DEST_ARRAYS} \
+        if dest_len else {}
     return CommPlan(
         n=int(meta[1]), p=int(meta[2]), shard_size=int(meta[3]),
         blocksize=int(meta[4]), topology=topo, m=int(meta[14]),
         s_max=int(meta[7]), b_max=int(meta[8]),
         r_loc_max=int(meta[9]), r_rem_max=int(meta[10]),
-        counts=counts,
+        counts=counts, dest_len=dest_len, **dest,
         **{name: np.asarray(data[name]) for name in _PLAN_ARRAYS},
     )
 
@@ -165,14 +253,32 @@ def _load_disk(key: str) -> CommPlan | None:
         return None
     try:
         with np.load(path) as data:
-            return _deserialize(data)
+            if "base_key" not in data.files:
+                return _deserialize(data)
+            # destination delta: dest arrays + a reference to the base
+            meta = data["meta"]
+            _check_version(meta)
+            base_key = data["base_key"].tobytes().decode("ascii")
+            dest_len = int(meta[15])
+            dest = {name: np.asarray(data[name]) for name in _DEST_ARRAYS}
+        base = _memory.get(base_key)
+        if base is None:
+            base = _load_disk(base_key)
+        if base is None:
+            return None  # base evicted; caller re-derives from scratch
+        return dataclasses.replace(base, dest_len=dest_len, **dest)
+    except StalePlanCacheError as e:
+        # v2 (or older) entry: reject loudly with the migration message and
+        # rebuild — never reinterpret old bytes as a current-format plan
+        warnings.warn(str(e), stacklevel=2)
+        return None
     except Exception:
-        # corrupt / stale entry: treat as miss, rebuild will overwrite
+        # corrupt entry: treat as miss, rebuild will overwrite
         return None
 
 
-def _store_disk(key: str, plan: CommPlan) -> None:
-    data = _serialize(plan)
+def _store_disk(key: str, plan: CommPlan, base_key: str | None = None) -> None:
+    data = _serialize(plan, base_key)
     if sum(a.nbytes for a in data.values()) > _max_disk_bytes():
         return  # memory-only: don't let huge plans fill the disk
     path = _disk_path(key)
@@ -194,18 +300,31 @@ def get_comm_plan(
     *,
     blocksize: int | None = None,
     topology: Topology | None = None,
+    destination=None,
+    base: CommPlan | None = None,
     cache: bool = True,
 ) -> CommPlan:
-    """Cached drop-in for ``build_comm_plan`` (same semantics, same result)."""
+    """Cached drop-in for ``build_comm_plan`` (same semantics, same result).
+
+    With ``destination`` the entry is keyed on (pattern, destination); on a
+    miss the pattern-only base plan is looked up first, so attaching a new
+    ``Destination`` to an already-planned pattern skips the O(nnz) build
+    and pays only the O(L) slot-resolution pass.  The on-disk entry stores
+    only that delta (dest arrays + base reference), never a second copy of
+    the base arrays.  A caller that already holds the destination-free plan
+    for the same inputs passes it as ``base`` to skip even the lookup.
+    """
     shard_size = n // p
     bs = shard_size if blocksize is None else blocksize
     topo = topology if topology is not None else Topology(p, p)
     if not (cache and _enabled()):
+        if destination is not None and base is not None:
+            return attach_destination(base, destination)
         stats.misses += 1
         return build_comm_plan(cols, n, p, blocksize=blocksize,
-                               topology=topology)
+                               topology=topology, destination=destination)
 
-    key = plan_key(cols, n, p, bs, topo)
+    key = plan_key(cols, n, p, bs, topo, destination)
     plan = _memory.get(key)
     if plan is not None:
         stats.memory_hits += 1
@@ -217,8 +336,20 @@ def get_comm_plan(
         _memory_put(key, plan)
         return plan
 
-    stats.misses += 1
-    plan = build_comm_plan(cols, n, p, blocksize=blocksize, topology=topology)
-    _memory_put(key, plan)
-    _store_disk(key, plan)
+    if destination is not None:
+        # the O(nnz) part is destination-independent: reuse (and populate)
+        # the base entry, then attach the cheap O(L) destination arrays
+        if base is None:
+            base = get_comm_plan(cols, n, p, blocksize=blocksize,
+                                 topology=topology, cache=cache)
+        plan = attach_destination(base, destination)
+        _memory_put(key, plan)
+        _store_disk(key, plan, base_key=plan_key(cols, n, p, bs, topo))
+    else:
+        _evict_stale_entries(cols, n, p, bs, topo)
+        stats.misses += 1
+        plan = build_comm_plan(cols, n, p, blocksize=blocksize,
+                               topology=topology)
+        _memory_put(key, plan)
+        _store_disk(key, plan)
     return plan

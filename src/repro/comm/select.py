@@ -34,11 +34,25 @@ def _perfmodel():
     return perfmodel
 
 
-def workload_from_plan(plan: CommPlan, r_nz: int):
+def workload_from_plan(plan: CommPlan, r_nz: int, *,
+                       materialize: str | None = None,
+                       dest_slots: int | None = None):
+    """Build the §5 workload record for one plan.
+
+    ``materialize`` selects the unpack pricing: ``None`` keeps the paper's
+    in-place unpack (eq. 15 as written), ``"full"`` adds the O(n)
+    x_copy-assembly tax our functional XLA unpack pays, ``"dest"`` prices
+    the consumer-targeted O(slots + recv) unpack instead.  ``dest_slots``
+    defaults to the plan's ``dest_len`` (the flattened ``Destination``
+    size).
+    """
     pm = _perfmodel()
+    if dest_slots is None and materialize == "dest":
+        dest_slots = plan.dest_len
     return pm.SpmvWorkload(
         n=plan.n, r_nz=r_nz, p=plan.p, blocksize=plan.blocksize,
-        topology=plan.topology, counts=plan.counts, m=plan.m)
+        topology=plan.topology, counts=plan.counts, m=plan.m,
+        materialize=materialize, dest_slots=dest_slots)
 
 
 def rank_strategies(
@@ -47,10 +61,18 @@ def rank_strategies(
     hw,
     *,
     candidates=None,
+    materialize: str | None = None,
+    dest_slots: int | None = None,
 ) -> list[tuple[str, float]]:
-    """[(strategy, predicted_seconds)] sorted fastest-first (§5 formulas)."""
+    """[(strategy, predicted_seconds)] sorted fastest-first (§5 formulas).
+
+    ``materialize`` / ``dest_slots`` thread the unpack-mode pricing through
+    (see ``workload_from_plan``) so a consumer with a ``Destination``
+    descriptor ranks rungs by the targeted-unpack cost it will actually pay.
+    """
     pm = _perfmodel()
-    w = workload_from_plan(plan, r_nz)
+    w = workload_from_plan(plan, r_nz, materialize=materialize,
+                           dest_slots=dest_slots)
     names = tuple(candidates) if candidates else tuple(pm.STRATEGY_PREDICTORS)
     ranked = [(name, float(pm.STRATEGY_PREDICTORS[name](w, hw)))
               for name in names]
@@ -66,12 +88,16 @@ def choose_strategy(
     mesh=None,
     axis_name=None,
     candidates=None,
+    materialize: str | None = None,
+    dest_slots: int | None = None,
 ) -> str:
     """Predicted-fastest strategy for this plan on this hardware."""
     if hw is None:
         from repro.core import tune
         hw = tune.measure_hardware(mesh, axis_name)
-    return rank_strategies(plan, r_nz, hw, candidates=candidates)[0][0]
+    return rank_strategies(plan, r_nz, hw, candidates=candidates,
+                           materialize=materialize,
+                           dest_slots=dest_slots)[0][0]
 
 
 def blocksize_candidates(shard_size: int, *, min_bs: int = 8) -> list[int]:

@@ -36,6 +36,12 @@ class SharedVector:
     ``axis_name`` may be a tuple of mesh axes; ownership then follows the
     mesh's row-major rank order over those axes (rank = i0*s1*… + i1*… + …),
     matching ``PartitionSpec((a, b, …))`` placement.
+
+    >>> import jax, numpy as np
+    >>> p = len(jax.devices())
+    >>> sv = SharedVector(jax.make_mesh((p,), ("data",)), n=16 * p)
+    >>> sv.shard_size == 16 and int(sv.owner_of(16 * p - 1)) == p - 1
+    True
     """
 
     mesh: jax.sharding.Mesh

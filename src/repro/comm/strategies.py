@@ -29,6 +29,13 @@ The ``*_start_local`` / ``*_finish_local`` pairs split each strategy at its
 collective so ``OverlapHandle`` can expose an own-compute window between the
 two (XLA's latency-hiding scheduler overlaps anything scheduled in between
 that has no data dependency on the collective's result).
+
+When the plan carries a ``Destination`` descriptor (``plan.dest_len > 0``),
+each strategy additionally exposes a *targeted* finish: the landed recv
+buffer is gathered straight into the consumer's flat slot buffer (length
+``dest_len``) — O(slots + recv) work instead of the O(n) zeros+scatter that
+assembling ``x_copy`` costs.  The assembled full copy remains available via
+``finish(..., materialize="full")``.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ __all__ = [
     "replicate_gather_local",
     "blockwise_gather_local",
     "condensed_gather_local",
+    "dest_gather_local",
     "plan_device_args",
     "gather_in_specs",
     "make_gather_local",
@@ -185,6 +193,29 @@ def blockwise_finish_local(
     return x_copy
 
 
+def dest_gather_local(
+    recv_flat: jax.Array,   # (R, ...) flattened landed recv buffer
+    x_local: jax.Array,     # (shard, ...)
+    src_idx: jax.Array,     # (L,) position in recv_flat of each foreign slot
+    own_idx: jax.Array,     # (L,) position in x_local of each owned slot
+    own_mask: jax.Array,    # (L,) int8: 1 where the slot is owned
+    rem_mask: jax.Array,    # (L,) int8: 1 where the slot is foreign
+) -> jax.Array:
+    """Consumer-targeted unpack: deliver values straight into the L named
+    slots.  Each slot is exactly one of {owned, foreign, zero}: owned slots
+    gather from ``x_local``, foreign slots from the landed recv buffer, and
+    zero slots (both masks 0) read exactly 0.0.  All operands are O(L) or
+    O(recv) — the full-length x_copy is never built."""
+    feat = x_local.shape[1:]
+
+    def bmask(mask):
+        return mask.reshape(mask.shape + (1,) * len(feat)).astype(
+            x_local.dtype)
+
+    return (recv_flat[src_idx] * bmask(rem_mask)
+            + x_local[own_idx] * bmask(own_mask))
+
+
 def blockwise_gather_local(
     x_local: jax.Array,
     send_local_blk: jax.Array,   # (1, P, b_max)
@@ -210,24 +241,40 @@ def blockwise_gather_local(
     )
 
 
-def plan_device_args(plan: CommPlan, strategy: str) -> tuple[Any, ...]:
+def plan_device_args(plan: CommPlan, strategy: str,
+                     with_dest: bool = False) -> tuple[Any, ...]:
     """Host (numpy) plan arrays each strategy needs, to be passed through
-    shard_map with ``gather_in_specs`` so every device holds only its slice."""
+    shard_map with ``gather_in_specs`` so every device holds only its slice.
+
+    ``with_dest=True`` (requires a plan built with a ``Destination``)
+    appends the four targeted-unpack arrays: the strategy's recv-buffer
+    source index, the own-shard index, and the owned/foreign masks.
+    """
     if strategy == "replicate":
-        return ()
-    if strategy in ("condensed", "overlap"):
-        return (plan.send_local_idx, plan.recv_global_idx)
-    if strategy == "blockwise":
-        return (plan.send_local_blk, plan.recv_global_blk)
-    raise ValueError(f"unknown strategy {strategy!r}")
+        base = ()
+    elif strategy in ("condensed", "overlap"):
+        base = (plan.send_local_idx, plan.recv_global_idx)
+    elif strategy == "blockwise":
+        base = (plan.send_local_blk, plan.recv_global_blk)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    if not with_dest:
+        return base
+    assert plan.dest_own_idx is not None, (
+        "plan has no Destination; build it with destination=")
+    src = {"replicate": plan.dest_global_idx,
+           "blockwise": plan.dest_blk_src}.get(strategy, plan.dest_cond_src)
+    return base + (src, plan.dest_own_idx, plan.dest_own_mask,
+                   plan.dest_rem_mask)
 
 
-def gather_in_specs(strategy: str, axis_name):
+def gather_in_specs(strategy: str, axis_name, with_dest: bool = False):
     """PartitionSpecs matching ``plan_device_args`` (sharded on dim 0)."""
     p = jax.sharding.PartitionSpec
-    if strategy == "replicate":
-        return ()
-    return (p(axis_name), p(axis_name))
+    base = () if strategy == "replicate" else (p(axis_name), p(axis_name))
+    if with_dest:
+        base = base + (p(axis_name),) * 4
+    return base
 
 
 def make_gather_local(plan: CommPlan, strategy: str, axis_name):
@@ -256,15 +303,30 @@ def make_start_local(plan: CommPlan, strategy: str, axis_name):
     """Returns (start_fn, finish_fn) splitting the strategy at its collective.
 
     ``start_fn(x_local, *plan_args) -> in_flight``; ``finish_fn(in_flight,
-    x_local, *plan_args, extra_slots=..., copy_own=...) -> x_copy``.  Between
-    the two calls the consumer runs compute that depends only on ``x_local``
-    — the generalized own/foreign window of the ``overlap`` rung.
+    x_local, *plan_args, extra_slots=..., copy_own=..., materialize=...)``.
+    Between the two calls the consumer runs compute that depends only on
+    ``x_local`` — the generalized own/foreign window of the ``overlap`` rung.
+
+    When the plan args carry the four targeted-unpack arrays (built via
+    ``plan_device_args(plan, strategy, with_dest=True)``), ``finish``
+    honors ``materialize``: ``"full"`` assembles the classic x_copy (len >=
+    n); ``"dest"`` returns the flat ``(dest_len, ...)`` consumer-slot buffer
+    with no full-length intermediate.  Without a destination only
+    ``"full"`` is available.
     """
+    def unpack_dest(recv_flat, x_local, dest):
+        src, own_idx, own_mask, rem_mask = dest
+        return dest_gather_local(recv_flat, x_local, src[0], own_idx[0],
+                                 own_mask[0], rem_mask[0])
+
     if strategy == "replicate":
-        def start(x_local, *, axis_name=axis_name):
+        def start(x_local, *args):
             return replicate_gather_local(x_local, axis_name=axis_name)
 
-        def finish(recv, x_local, *, extra_slots=0, copy_own=True):
+        def finish(recv, x_local, *args, extra_slots=0, copy_own=True,
+                   materialize="full"):
+            if materialize == "dest":
+                return unpack_dest(recv, x_local, args)
             if extra_slots:
                 feat = x_local.shape[1:]
                 pad = jnp.zeros((1 + extra_slots,) + feat, x_local.dtype)
@@ -273,12 +335,15 @@ def make_start_local(plan: CommPlan, strategy: str, axis_name):
 
         return start, finish
     if strategy in ("condensed", "overlap"):
-        def start(x_local, send_idx, recv_idx):
+        def start(x_local, send_idx, recv_idx, *dest):
             return condensed_start_local(
                 x_local, send_idx, axis_name=axis_name)
 
-        def finish(recv, x_local, send_idx, recv_idx, *, extra_slots=0,
-                   copy_own=True):
+        def finish(recv, x_local, send_idx, recv_idx, *dest, extra_slots=0,
+                   copy_own=True, materialize="full"):
+            if materialize == "dest":
+                feat = x_local.shape[1:]
+                return unpack_dest(recv.reshape((-1,) + feat), x_local, dest)
             return condensed_finish_local(
                 recv, x_local, recv_idx, axis_name=axis_name, n=plan.n,
                 shard_size=plan.shard_size, extra_slots=extra_slots,
@@ -286,13 +351,16 @@ def make_start_local(plan: CommPlan, strategy: str, axis_name):
 
         return start, finish
     if strategy == "blockwise":
-        def start(x_local, send_blk, recv_blk):
+        def start(x_local, send_blk, recv_blk, *dest):
             return blockwise_start_local(
                 x_local, send_blk, axis_name=axis_name,
                 shard_size=plan.shard_size, blocksize=plan.blocksize)
 
-        def finish(recv, x_local, send_blk, recv_blk, *, extra_slots=0,
-                   copy_own=True):
+        def finish(recv, x_local, send_blk, recv_blk, *dest, extra_slots=0,
+                   copy_own=True, materialize="full"):
+            if materialize == "dest":
+                feat = x_local.shape[1:]
+                return unpack_dest(recv.reshape((-1,) + feat), x_local, dest)
             return blockwise_finish_local(
                 recv, x_local, recv_blk, axis_name=axis_name, n=plan.n,
                 shard_size=plan.shard_size, blocksize=plan.blocksize,

@@ -14,22 +14,24 @@ paper's ``halo_exchange_intrinsic``), but the full ladder now applies:
 ``strategy=`` accepts any rung or ``"auto"``, priced by the same §5 models
 as every other consumer.
 
-Devices at the grid boundary read the gather's guaranteed-zero slot, which
-is harmless: the update is masked to the global interior, reproducing the
-paper's "boundary rows/cols are copied" semantics.
+Devices at the grid boundary read guaranteed-zero slots, which is harmless:
+the update is masked to the global interior, reproducing the paper's
+"boundary rows/cols are copied" semantics.
 
-Trade-off: like every UPCv3-style consumer, each device assembles a
-full-length ``mythread_x_copy`` (big_m*big_n elements) per step even though
-only the four halo strips are foreign — O(area) buffer traffic for an
-O(perimeter) exchange.  The exchanged *communication* volume is still just
-the halos (what the §5 models price); a strip-targeted unpack that skips
-the global x_copy is a known future optimization (see ROADMAP).
+The halo strips are a ``Destination`` descriptor (four named slot tables:
+``up`` / ``down`` / ``left`` / ``right``), so by default each step's
+``finish`` scatters the landed recv buffer *straight into the strips* —
+O(perimeter) unpack work for the O(perimeter) exchange.  Pass
+``materialize="full"`` to fall back to assembling the full-length
+``mythread_x_copy`` (big_m*big_n elements, the paper's UPCv3 layout) and
+indexing the strips out of it — bit-identical results, O(area) buffer
+traffic per step.
 
 ``overlap=True`` (or ``strategy="overlap"``) splits each step via the
 ``OverlapHandle`` protocol: the tile-interior update (no halo dependency)
 runs while the exchange is in flight; only the one-cell edge ring consumes
 the landed halos.  Composes with ``use_kernel=True`` (interior and edge
-strips through the Pallas stencil kernel).
+strips through the Pallas stencil kernel) and with either materialization.
 """
 from __future__ import annotations
 
@@ -42,7 +44,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.comm.gather import IrregularGather
-from repro.comm.pattern import AccessPattern
+from repro.comm.pattern import AccessPattern, Destination
 from repro.comm.plan import Topology
 
 __all__ = ["Heat2D"]
@@ -82,7 +84,10 @@ class Heat2D:
     additionally splits each step into the tile-interior update (which
     needs no halo and can hide the exchange) plus a thin edge-ring update
     that consumes the landed halos — the heat-equation analogue of the SpMV
-    ``overlap`` strategy.
+    ``overlap`` strategy.  ``materialize`` picks the unpack: ``"dest"``
+    (default) lands the exchange straight into the four named halo strips
+    (O(halo) per step); ``"full"`` assembles the paper's full-length
+    ``mythread_x_copy`` first (bit-identical result).
     """
 
     def __init__(self, mesh, big_m: int, big_n: int, *,
@@ -90,9 +95,11 @@ class Heat2D:
                  coef: float = 0.1, use_kernel: bool = False,
                  overlap: bool = False, strategy: str | None = None,
                  blocksize: int | str | None = None,
-                 shards_per_node: int | None = None, hw=None):
+                 shards_per_node: int | None = None,
+                 materialize: str = "dest", hw=None):
         if strategy is None:
             strategy = "overlap" if overlap else "condensed"
+        assert materialize in ("dest", "full"), materialize
         self.mesh = mesh
         mprocs = mesh.shape[row_axis]
         nprocs = mesh.shape[col_axis]
@@ -102,14 +109,23 @@ class Heat2D:
         m_loc, n_loc = big_m // mprocs, big_n // nprocs
         self.spec = P(row_axis, col_axis)
         self.sharding = NamedSharding(mesh, self.spec)
+        self.materialize = materialize
 
         comm_axes = (row_axis, col_axis)
         p = mprocs * nprocs
         n = big_m * big_n
         pattern = AccessPattern.from_stencil5(big_m, big_n, mprocs, nprocs)
+        destination = None
+        if materialize == "dest":
+            # the four halo strips ARE the consumer slots: finish() lands
+            # the exchange straight into them, no length-n x_copy ever built
+            up, down, left, right = _halo_indices(
+                big_m, big_n, mprocs, nprocs, zero_slot=Destination.ZERO)
+            destination = Destination.from_slots(
+                up=up, down=down, left=left, right=right)
         self.gather = IrregularGather(
             pattern, mesh, axis_name=comm_axes, strategy=strategy,
-            blocksize=blocksize,
+            blocksize=blocksize, destination=destination,
             topology=Topology(p, shards_per_node or p), hw=hw,
         )
         self.strategy = self.gather.strategy
@@ -119,17 +135,21 @@ class Heat2D:
         self.overlap = overlap or self.strategy == "overlap"
         gather = self.gather
 
-        # runtime halo index tables; padding reads the guaranteed-zero slot
-        halo_idx = _halo_indices(big_m, big_n, mprocs, nprocs, zero_slot=n + 1)
-        axis_spec = P(comm_axes)
-        self._halo_args = tuple(
-            jax.device_put(a, NamedSharding(mesh, axis_spec))
-            for a in halo_idx)
+        if materialize == "dest":
+            self._halo_args = ()
+        else:
+            # runtime halo index tables into the assembled x_copy; padding
+            # reads the guaranteed-zero slot
+            halo_idx = _halo_indices(big_m, big_n, mprocs, nprocs,
+                                     zero_slot=n + 1)
+            axis_spec = P(comm_axes)
+            self._halo_args = tuple(
+                jax.device_put(a, NamedSharding(mesh, axis_spec))
+                for a in halo_idx)
         split = self.overlap
 
         def step_local(phi, *args):
             gargs = args[:len(gather.plan_args)]
-            up_i, dn_i, lf_i, rt_i = args[len(gather.plan_args):]
             x_local = phi.reshape(-1)
             # issue the exchange; everything reading only phi can overlap it
             handle = gather.start_local(x_local, *gargs)
@@ -144,13 +164,21 @@ class Heat2D:
                     from repro.kernels import ref as kref
                     inner = kref.stencil2d_ref(phi, coef)
 
-            x_copy = handle.finish(extra_slots=1, copy_own=False)
+            if materialize == "dest":
+                halos = handle.finish()    # {up,down,left,right} strips
+                up_v, dn_v = halos["up"], halos["down"]
+                lf_v, rt_v = halos["left"], halos["right"]
+            else:
+                up_i, dn_i, lf_i, rt_i = args[len(gather.plan_args):]
+                x_copy = handle.finish(extra_slots=1, copy_own=False)
+                up_v, dn_v = x_copy[up_i[0]], x_copy[dn_i[0]]
+                lf_v, rt_v = x_copy[lf_i[0]], x_copy[rt_i[0]]
             padded = jnp.zeros((m_loc + 2, n_loc + 2), phi.dtype)
             padded = padded.at[1:-1, 1:-1].set(phi)
-            padded = padded.at[0, 1:-1].set(x_copy[up_i[0]])
-            padded = padded.at[-1, 1:-1].set(x_copy[dn_i[0]])
-            padded = padded.at[1:-1, 0].set(x_copy[lf_i[0]])
-            padded = padded.at[1:-1, -1].set(x_copy[rt_i[0]])
+            padded = padded.at[0, 1:-1].set(up_v)
+            padded = padded.at[-1, 1:-1].set(dn_v)
+            padded = padded.at[1:-1, 0].set(lf_v)
+            padded = padded.at[1:-1, -1].set(rt_v)
 
             # --- compute (paper Listing 8) ---
             if split:
@@ -188,7 +216,7 @@ class Heat2D:
             return jnp.where(interior, upd, phi)
 
         in_specs = ((self.spec,) + gather.in_specs
-                    + (axis_spec,) * 4)
+                    + (P(comm_axes),) * len(self._halo_args))
         mapped = compat.shard_map(
             step_local, mesh=mesh, in_specs=in_specs, out_specs=self.spec,
             check_vma=False,

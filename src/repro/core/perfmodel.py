@@ -26,7 +26,7 @@ __all__ = [
     "HardwareParams", "ABEL", "TPU_V5E", "SpmvWorkload",
     "predict_v1", "predict_v2", "predict_v3", "predict_replicate",
     "predict_overlap", "predict_all", "STRATEGY_PREDICTORS",
-    "predict_heat2d", "Heat2DWorkload",
+    "predict_heat2d", "Heat2DWorkload", "full_assembly_tax",
 ]
 
 
@@ -76,6 +76,15 @@ class SpmvWorkload:
     topology: Topology
     counts: GatherCounts
     m: int | None = None   # accessor rows; None -> n (SpMV-like)
+    # Unpack-mode pricing (beyond paper; see docs/perf_model.md):
+    #   None   — the paper's in-place unpack (eq. 15 as written; UPC reuses
+    #            a persistent mythread_x_copy, so no assembly cost).
+    #   "full" — our functional XLA unpack assembles a fresh length-n x_copy
+    #            (zeros + scatter) every exchange: eq. 15 gains an O(n) term.
+    #   "dest" — consumer-targeted unpack into ``dest_slots`` named slots:
+    #            the eq.-14 own-copy vanishes and eq. 15 becomes O(slots).
+    materialize: str | None = None
+    dest_slots: int | None = None   # flattened Destination size L
 
     @property
     def shard_size(self) -> int:
@@ -135,6 +144,12 @@ def predict_v2(w: SpmvWorkload, hw: HardwareParams) -> float:
         t_local = np.max(c.b_local[th] * 2.0 * bs_bytes / hw.w_private)
         t_remote = np.sum(c.b_remote[th] * (hw.tau + bs_bytes / hw.w_remote))
         total = max(total, np.max(t_comp[th]) + t_local + t_remote)
+    # unpack-mode extension (docs/perf_model.md): the paper's UPCv2 reads
+    # landed blocks in place; our functional paths pay a delivery tail
+    if w.materialize == "full":
+        total += 2.0 * (w.n + w.blocksize) * hw.elem / hw.w_private
+    elif w.materialize == "dest":
+        total += (w.dest_slots or 0) * (hw.elem + hw.cacheline) / hw.w_private
     return float(total)
 
 
@@ -145,16 +160,44 @@ def predict_v2(w: SpmvWorkload, hw: HardwareParams) -> float:
 def v3_components(
     w: SpmvWorkload, hw: HardwareParams
 ) -> dict[str, np.ndarray]:
-    """Per-thread pack/copy/unpack (and per-thread memput inputs), eqs. 12–15."""
+    """Per-thread pack/copy/unpack (and per-thread memput inputs), eqs. 12–15.
+
+    The copy/unpack terms depend on ``w.materialize`` (the unpack-mode
+    extension, eqs. 14′/15′ in docs/perf_model.md): ``None`` is the paper's
+    in-place unpack; ``"full"`` adds the O(n) x_copy-assembly traffic the
+    functional XLA scatter pays; ``"dest"`` replaces both with the
+    consumer-targeted O(slots + recv) delivery (eq.-14 copy drops — owned
+    slots are gathered from x_local inside the slot term).
+    """
     c = w.counts
     s_out = c.s_local_out + c.s_remote_out
     s_in = c.s_local_in + c.s_remote_in
     t_pack = s_out * (2 * hw.elem + hw.idx) / hw.w_private           # (12)
-    t_copy = np.full(
-        w.p, 2.0 * w.shard_size * hw.elem / hw.w_private            # (14)
-    )
-    t_unpack = s_in * (hw.elem + hw.idx + hw.cacheline) / hw.w_private  # (15)
+    if w.materialize == "dest":
+        slots = w.dest_slots or 0
+        t_copy = np.zeros(w.p)                                      # no (14)
+        # (15'): read each landed value + its index once out of the small
+        # condensed recv buffer, then write the L slots contiguously in
+        # consumer order (the delivery IS the consumer's gather, so no
+        # extra cacheline charge per slot)
+        t_unpack = (s_in * (hw.elem + hw.idx) / hw.w_private
+                    + slots * hw.elem / hw.w_private)
+    else:
+        t_copy = np.full(
+            w.p, 2.0 * w.shard_size * hw.elem / hw.w_private        # (14)
+        )
+        t_unpack = s_in * (hw.elem + hw.idx
+                           + hw.cacheline) / hw.w_private           # (15)
+        if w.materialize == "full":
+            t_unpack = t_unpack + full_assembly_tax(w.n, hw)
     return {"pack": t_pack, "copy": t_copy, "unpack": t_unpack}
+
+
+def full_assembly_tax(n: int, hw: HardwareParams) -> float:
+    """Eq. (15') full-mode term: our functional XLA unpack zero-fills and
+    writes a fresh length-n copy every exchange (the paper's UPC code
+    reuses a persistent buffer and never pays this)."""
+    return 2.0 * (n + 1) * hw.elem / hw.w_private
 
 
 def predict_v3(w: SpmvWorkload, hw: HardwareParams) -> float:
@@ -193,6 +236,11 @@ def predict_replicate(w: SpmvWorkload, hw: HardwareParams) -> float:
         2.0 * local_vol / hw.w_private
         + (hw.tau * max(0, topo.num_nodes - 1) + remote_vol / hw.w_remote)
     )
+    # the all-gather output IS the full copy (no assembly tax in "full"
+    # mode); targeted delivery still pays the O(slots) gather out of it
+    if w.materialize == "dest":
+        t_comm += (w.dest_slots or 0) * (hw.elem
+                                         + hw.cacheline) / hw.w_private
     return float(np.max(t_comp_per_thread(w, hw)) + t_comm)
 
 
@@ -315,9 +363,16 @@ def _heat2d_volumes(w: Heat2DWorkload):
 
 
 def predict_heat2d(
-    w: Heat2DWorkload, hw: HardwareParams, steps: int = 1
+    w: Heat2DWorkload, hw: HardwareParams, steps: int = 1,
+    materialize: str | None = None,
 ) -> dict[str, float]:
-    """Returns {"halo": T_2D_halo, "comp": T_2D_comp} for ``steps`` steps."""
+    """Returns {"halo": T_2D_halo, "comp": T_2D_comp} for ``steps`` steps.
+
+    ``materialize`` mirrors the SpMV models: ``None``/``"dest"`` is the
+    paper's in-place O(halo) unpack (eqs. 19–21 as written — exactly what
+    the strip-targeted ``Destination`` runs); ``"full"`` adds the eq.-(15')
+    per-step tax of assembling the big_m*big_n ``mythread_x_copy``.
+    """
     s_horiz, s_local, s_remote, c_remote = _heat2d_volumes(w)
 
     # eq. (19): pack == unpack (horizontal only; vertical is contiguous)
@@ -334,6 +389,9 @@ def predict_heat2d(
         halo = max(
             halo, np.max(t_pack[th]) + t_loc + t_rem + np.max(t_pack[th])
         )  # eq. (21): pack + memget + unpack, max-composed per node
+
+    if materialize == "full":
+        halo += full_assembly_tax(w.big_m * w.big_n, hw)
 
     # eq. (22): 3 * (m-2) * (n-2) * elem / w_private
     comp = 3.0 * (w.m - 2) * (w.n - 2) * hw.elem / hw.w_private

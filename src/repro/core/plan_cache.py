@@ -5,9 +5,9 @@ same object as ``repro.comm.plan_cache``'s, so existing monitoring keeps
 seeing every hit/miss.  New code should import from ``repro.comm``.
 """
 from repro.comm.plan_cache import (  # noqa: F401
-    CacheStats, cache_dir, clear_memory_cache, get_comm_plan, plan_key,
-    stats, _disk_path, _memory,
+    CacheStats, StalePlanCacheError, cache_dir, clear_memory_cache,
+    get_comm_plan, plan_key, stats, _disk_path, _key_for_version, _memory,
 )
 
 __all__ = ["plan_key", "get_comm_plan", "clear_memory_cache", "stats",
-           "CacheStats", "cache_dir"]
+           "CacheStats", "StalePlanCacheError", "cache_dir"]

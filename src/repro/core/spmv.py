@@ -15,6 +15,14 @@ hardware parameters once per mesh and lets the §5 performance models pick.
 resolved choices are available as ``engine.strategy`` / ``engine.blocksize``;
 the request is kept in ``engine.requested_strategy``.
 
+``materialize`` picks the unpack: ``"dest"`` (default on the jnp paths)
+registers the EllPack slot table as a ``Destination`` so each exchange
+lands directly in gather-slot order — O(slots + recv) per step, no
+full-length ``x_copy`` ever assembled; ``"full"`` keeps the paper's UPCv3
+layout (assemble ``mythread_x_copy``, then index it), bit-identical
+results.  The split-kernel paths (``use_kernel=True``) consume the
+assembled copy and therefore always run ``materialize="full"``.
+
 The ``overlap`` strategy uses the ``OverlapHandle`` protocol: issue the
 condensed ``all_to_all``, run the own-shard partial SpMV (which depends only
 on ``x_local``) while the exchange is in flight, then finish with the
@@ -39,7 +47,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.comm.gather import IrregularGather
-from repro.comm.pattern import AccessPattern
+from repro.comm.pattern import AccessPattern, Destination
 from repro.comm.plan import CommPlan, Topology
 from repro.core.matrix import EllpackMatrix
 
@@ -68,6 +76,7 @@ class DistributedSpMV:
         blocksize: int | str | None = None,
         shards_per_node: int | None = None,
         use_kernel: bool = False,
+        materialize: str | None = None,
         hw=None,
         use_plan_cache: bool = True,
     ):
@@ -80,10 +89,39 @@ class DistributedSpMV:
         assert n % p == 0, "pad the matrix so n divides the mesh axis"
         topology = Topology(p, shards_per_node or p)
 
+        if materialize is None:
+            materialize = "full" if use_kernel else "dest"
+        if materialize == "dest" and use_kernel:
+            raise ValueError(
+                "the split-kernel paths consume the assembled x_copy; "
+                'use materialize="full" with use_kernel=True')
+        assert materialize in ("dest", "full"), materialize
+        self.materialize = materialize
+        rows_per_shard = matrix.cols.shape[0] // p
+
+        destination = None
+        if materialize == "dest":
+            # land every gathered value in EllPack slot order: accessor row
+            # i's slot j reads x[J[i, j]] — delivered without ever building
+            # the length-n private copy.  The overlap rung resolves owned
+            # slots from x_local inside the own partial, so there the
+            # destination targets the plan's foreign (rem) slots only;
+            # resolved per strategy, after "auto" picks (no throwaway plan
+            # entry gets cached).
+            def destination(resolved, base_plan):
+                if resolved == "overlap":
+                    rem = np.where(base_plan.rem_cols >= n,
+                                   Destination.ZERO, base_plan.rem_cols)
+                    return Destination.from_slots(
+                        foreign=rem.reshape(p, rows_per_shard, -1))
+                return Destination.from_slots(
+                    ellpack=matrix.cols.reshape(p, rows_per_shard, -1))
         self.gather = IrregularGather(
             AccessPattern.from_ellpack(matrix), mesh,
             axis_name=axis_name, strategy=strategy, blocksize=blocksize,
-            topology=topology, hw=hw, use_plan_cache=use_plan_cache,
+            topology=topology, destination=destination,
+            dest_slots=rows_per_shard * matrix.cols.shape[1],
+            hw=hw, use_plan_cache=use_plan_cache,
         )
         self.plan: CommPlan = self.gather.plan
         self.requested_strategy = strategy
@@ -99,6 +137,11 @@ class DistributedSpMV:
             # the overlap step never reads the unsplit matrix; keeping
             # vals/cols resident would double the device footprint
             self._vals = self._cols = None
+        elif materialize == "dest":
+            # targeted delivery arrives already in EllPack slot order — the
+            # runtime column table is baked into the plan, not an operand
+            self._vals = jax.device_put(matrix.vals, shard2)
+            self._cols = None
         else:
             self._vals = jax.device_put(matrix.vals, shard2)
             self._cols = jax.device_put(matrix.cols, shard2)
@@ -130,6 +173,36 @@ class DistributedSpMV:
                 return y_own + y_rem
 
             kernel_specs = (P(axis_name),) * n_kargs
+        elif strategy == "overlap" and materialize == "dest":
+            plan = self.plan
+            # split vals the same way the plan split cols; padded slots are
+            # guaranteed-zero deliveries, so their vals are never observed
+            loc_vals = np.take_along_axis(matrix.vals, plan.loc_src, axis=1)
+            rem_vals = np.take_along_axis(matrix.vals, plan.rem_src, axis=1)
+            self._plan_args = self._gather_args + tuple(
+                jax.device_put(a, shard2)
+                for a in (plan.loc_cols, loc_vals, rem_vals)
+            )
+            n_gargs = len(self._gather_args)
+
+            def step_local(x_local, diag_l, *args):
+                loc_cols_l, loc_vals_l, rem_vals_l = args[n_gargs:]
+                # 1. issue the condensed exchange (paper Listing 5 pack)
+                handle = gather.start_local(x_local, *args[:n_gargs])
+                # 2. own-shard partial: no dependency on the landed messages,
+                # so the scheduler can run it while the collective is in
+                # flight
+                x_ext = jnp.concatenate(
+                    [x_local, jnp.zeros((1,), x_local.dtype)])
+                y_own = diag_l * x_local + (
+                    loc_vals_l * x_ext[loc_cols_l]).sum(axis=-1)
+                # 3. foreign partial straight off the targeted delivery:
+                # the landed messages arrive in (row, rem-slot) order
+                foreign = handle.finish()["foreign"]
+                y_rem = (rem_vals_l * foreign).sum(axis=-1)
+                return y_own + y_rem
+
+            kernel_specs = (P(axis_name, None),) * 3
         elif strategy == "overlap":
             plan = self.plan
             # split vals the same way the plan split cols; padded slots point
@@ -179,6 +252,14 @@ class DistributedSpMV:
 
             kernel_specs = (P(axis_name, None), P(axis_name, None, None),
                             P(axis_name, None))
+        elif materialize == "dest":
+            def step_local(x_local, diag_l, vals_l, *plan_args):
+                # landed values arrive already in EllPack slot order; owned
+                # slots were gathered from x_local by the same delivery
+                gathered = gather.local(x_local, *plan_args)["ellpack"]
+                return diag_l * x_local + (vals_l * gathered).sum(axis=-1)
+
+            kernel_specs = ()
         else:
             def step_local(x_local, diag_l, vals_l, cols_l, *plan_args):
                 x_copy = gather.local(x_local, *plan_args)
@@ -192,6 +273,9 @@ class DistributedSpMV:
         if strategy == "overlap":
             base_args = (self._diag,)
             base_specs = (P(axis_name), P(axis_name))
+        elif materialize == "dest":
+            base_args = (self._diag, self._vals)
+            base_specs = (P(axis_name), P(axis_name), P(axis_name, None))
         else:
             base_args = (self._diag, self._vals, self._cols)
             base_specs = (P(axis_name), P(axis_name), P(axis_name, None),

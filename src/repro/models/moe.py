@@ -190,20 +190,27 @@ class MoEDispatchGather:
 
     Tokens (the shared vector, length ``num_tokens``, optional feature dims)
     and experts (``num_experts``, ``capacity`` slots each) are both sharded
-    contiguously over ``axis_name``.  Any ladder rung or ``"auto"`` applies;
-    the ``overlap`` rung fills owned-token slots from ``x_local`` while the
-    condensed exchange is in flight (the plan's own/foreign split with
-    r = 1: every slot is either own or foreign).
+    contiguously over ``axis_name``.  Any ladder rung or ``"auto"`` applies.
+
+    ``materialize="dest"`` (default) registers the expert-capacity slots as
+    a ``Destination``: each exchange lands token vectors directly in
+    ``(expert, capacity-slot)`` order — O(slots + recv) work per dispatch,
+    empty slots read exactly 0.0, and no length-``num_tokens`` private copy
+    is ever assembled.  ``materialize="full"`` keeps the classic
+    assemble-then-index path (bit-identical output); there the ``overlap``
+    rung fills owned-token slots from ``x_local`` while the condensed
+    exchange is in flight (the plan's own/foreign split with r = 1).
     """
 
     def __init__(self, top_e, num_tokens: int, num_experts: int,
                  capacity: int, mesh, *, axis_name: str = "data",
                  strategy: str = "auto", blocksize=None,
-                 shards_per_node=None, hw=None, use_plan_cache: bool = True):
+                 shards_per_node=None, materialize: str = "dest",
+                 hw=None, use_plan_cache: bool = True):
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro import compat
         from repro.comm.gather import IrregularGather
-        from repro.comm.pattern import AccessPattern
+        from repro.comm.pattern import AccessPattern, Destination
         from repro.comm.plan import Topology
 
         p = int(mesh.shape[axis_name])
@@ -211,13 +218,23 @@ class MoEDispatchGather:
         self.num_tokens = num_tokens
         self.num_experts = num_experts
         self.capacity = capacity
+        assert materialize in ("dest", "full"), materialize
+        self.materialize = materialize
         idx, valid = moe_dispatch_pattern(
             top_e, num_tokens, num_experts, capacity, p)
         self.idx, self.valid = idx, valid
         pattern = AccessPattern.from_indices(idx, n=num_tokens)
+        destination = None
+        if materialize == "dest":
+            # capacity slots ARE the consumer buffer: empty slots (whose
+            # pattern entry is an owned zero-cost pad token) deliver 0.0
+            slot_idx = np.where(valid, idx.astype(np.int64),
+                                Destination.ZERO)
+            destination = Destination.from_slots(
+                slots=slot_idx.reshape(p, -1))
         self.gather = IrregularGather(
             pattern, mesh, axis_name=axis_name, strategy=strategy,
-            blocksize=blocksize,
+            blocksize=blocksize, destination=destination,
             topology=Topology(p, shards_per_node or p), hw=hw,
             use_plan_cache=use_plan_cache,
         )
@@ -229,7 +246,9 @@ class MoEDispatchGather:
 
         shard = NamedSharding(mesh, P(axis_name))
         n = num_tokens
-        if self.strategy == "overlap":
+        if materialize == "dest":
+            extra = ()
+        elif self.strategy == "overlap":
             plan = self.plan
             extra = (plan.loc_cols[:, 0], plan.rem_cols[:, 0],
                      valid.astype(np.float32))
@@ -241,6 +260,12 @@ class MoEDispatchGather:
             gargs = args[:len(gather.plan_args)]
             rest = args[len(gather.plan_args):]
             feat = x_local.shape[1:]
+            e_loc = num_experts // p
+            if materialize == "dest":
+                # one targeted delivery: owned tokens from x_local, foreign
+                # tokens from the landed recv buffer, empty slots exactly 0
+                vals = gather.local(x_local, *gargs)["slots"]
+                return vals.reshape((e_loc, capacity) + feat)
             if self.strategy == "overlap":
                 loc_l, rem_l, valid_l = rest
                 handle = gather.start_local(x_local, *gargs)
@@ -257,7 +282,6 @@ class MoEDispatchGather:
                 vals = x_copy[idx_l]
             mask = valid_l.reshape(valid_l.shape + (1,) * len(feat))
             buf = vals * mask.astype(vals.dtype)
-            e_loc = num_experts // p
             return buf.reshape((e_loc, capacity) + feat)
 
         in_specs = ((P(axis_name),) + gather.in_specs

@@ -116,6 +116,115 @@ def test_corrupt_disk_entry_degrades_to_rebuild(tmp_path):
     _assert_plans_equal(plan, fresh)
 
 
+def test_destination_plans_round_trip_and_reuse_base():
+    """v3 entries carry the targeted-unpack arrays; attaching a Destination
+    to an already-planned pattern reuses the cached base plan (no second
+    O(nnz) build)."""
+    from repro.comm.pattern import Destination
+
+    m, n, p, bs, topo = _case()
+    slots = m.cols[::4, :2].reshape(p, -1).astype(np.int64).copy()
+    slots[:, -1] = Destination.ZERO
+    dest = Destination.from_slots(s=slots)
+
+    base = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+    assert plan_cache.stats.misses == 1
+    p1 = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo,
+                                  destination=dest)
+    # the destination entry was derived from the cached base, not rebuilt
+    assert plan_cache.stats.misses == 1
+    assert p1.dest_len == slots.shape[1] and base.dest_len == 0
+    assert p1.dest_own_idx is not None
+
+    # disk round trip is bit-identical, including the dest arrays
+    plan_cache.clear_memory_cache()
+    p2 = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo,
+                                  destination=dest)
+    assert plan_cache.stats.disk_hits >= 1
+    _assert_plans_equal(p1, p2)
+    # distinct destinations get distinct keys
+    k0 = plan_cache.plan_key(m.cols, n, p, bs, topo)
+    k1 = plan_cache.plan_key(m.cols, n, p, bs, topo, dest)
+    slots2 = slots.copy()
+    slots2[0, 0] = (slots2[0, 0] + 1) % n
+    k2 = plan_cache.plan_key(m.cols, n, p, bs, topo,
+                             Destination.from_slots(s=slots2))
+    assert len({k0, k1, k2}) == 3
+
+
+def test_v2_cache_entry_rejected_with_clear_message():
+    """A genuine PR-2 → PR-3 upgrade: the old build keyed its entries with
+    the v2 content prefix, so a v3 lookup must probe that filename too,
+    surface the explicit migration warning, delete the orphan (it would
+    otherwise count against the disk cap forever), and rebuild."""
+    import os
+
+    m, n, p, bs, topo = _case()
+    plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+    v3_path = plan_cache._disk_path(plan_cache.plan_key(m.cols, n, p, bs,
+                                                        topo))
+    # simulate the pre-upgrade cache: the entry lives under the v2 key
+    v2_path = plan_cache._disk_path(
+        plan_cache._key_for_version(2, m.cols, n, p, bs, topo))
+    os.rename(v3_path, v2_path)
+
+    plan_cache.clear_memory_cache()
+    with pytest.warns(UserWarning, match="v2.*v3"):
+        plan = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs,
+                                        topology=topo)
+    assert not os.path.exists(v2_path)   # orphan evicted, not left behind
+    assert plan_cache.stats.misses == 2  # stale entry -> rebuild
+    fresh = build_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+    _assert_plans_equal(plan, fresh)
+
+
+def test_stale_format_meta_rejected_by_deserialize():
+    """Belt and braces: an entry whose meta says pre-v3 (however it got
+    under the current key) is refused with the migration message and
+    rebuilt — never reinterpreted as a current-format plan."""
+    m, n, p, bs, topo = _case()
+    plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+    path = plan_cache._disk_path(plan_cache.plan_key(m.cols, n, p, bs, topo))
+    with np.load(path) as data:
+        entries = {k: data[k] for k in data.files}
+    meta = entries["meta"].copy()
+    meta[0] = 2
+    entries["meta"] = meta[:15]  # v2 meta had no dest_len field
+    np.savez_compressed(path, **entries)
+
+    plan_cache.clear_memory_cache()
+    with pytest.warns(UserWarning, match="format v2.*v3"):
+        plan = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs,
+                                        topology=topo)
+    assert plan_cache.stats.misses == 2  # stale entry -> rebuild
+    fresh = build_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+    _assert_plans_equal(plan, fresh)
+
+
+def test_spmv_auto_dest_attaches_exactly_one_destination():
+    """strategy="auto" with targeted unpack must not persist a throwaway
+    destination entry: the strategy resolves against the base plan first,
+    then exactly one Destination (the one the step actually runs) is
+    attached and cached — one base entry + one dest entry on disk."""
+    import glob
+    import os
+
+    import jax
+    from repro.core import perfmodel as pm
+    from repro.core.spmv import DistributedSpMV
+
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("data",))
+    n = 128 * ndev
+    m = make_mesh_like_matrix(n, 4, locality_window=n // 4,
+                              long_range_frac=0.1, seed=9)
+    eng = DistributedSpMV(m, mesh, strategy="auto", blocksize=32, hw=pm.ABEL)
+    assert eng.materialize == "dest" and eng.requested_strategy == "auto"
+    files = glob.glob(os.path.join(plan_cache.cache_dir(), "*.npz"))
+    assert len(files) == 2, files      # base plan + the one used Destination
+    assert plan_cache.stats.misses == 1  # one O(nnz) build total
+
+
 def test_engine_second_construction_hits_cache():
     import jax
     from repro.core.spmv import DistributedSpMV
