@@ -141,6 +141,7 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50, smoke=False):
     table3_unpack_modes(n=n, r_nz=r_nz, iters=iters, mesh=mesh, m=m,
                         x_host=x_host, y_ref=y_ref)
     table3_moe_dispatch(smoke=smoke, iters=iters)
+    table3_scatter(smoke=smoke, iters=iters)
     return results
 
 
@@ -229,6 +230,114 @@ def table3_moe_dispatch(n_tok=1 << 14, d=32, smoke=False, iters=50):
                    "blockwise": c.total_blockwise_volume()}.get(
                        strategy, c.total_condensed_volume())
             csv_row(f"table3.moe_dispatch.{strategy}", t * 1e6,
+                    f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
+                    f"vol_elems={vol}")
+    return results
+
+
+# --------------------------------------------------------------------------
+# Table 3d: the push direction — MoE expert→token combine and transposed
+# SpMV on the scatter ladder, measured on 8 host devices with the §5
+# put-model predictions (docs/perf_model.md eqs. 12ᵀ–15ᵀ) per rung
+# --------------------------------------------------------------------------
+
+def table3_scatter(n=1 << 17, r_nz=16, smoke=False, iters=50):
+    from repro.comm import select
+    from repro.core import tune
+    from repro.core.matrix import spmv_t_ref_np
+    from repro.models.moe import (MoECombineScatter, moe_combine_ref,
+                                  moe_combine_weights, moe_dispatch_pattern)
+
+    if smoke:
+        n, iters = 1 << 14, 5
+    mesh = _mesh8()
+    rungs = ("replicate", "blockwise", "condensed", "overlap")
+
+    # -- spmv_transpose: y = (D + A)ᵀ x via scatter-accumulate --
+    print(f"# table3 scatter: transposed SpMV (n={n}) + MoE combine on the "
+          "put ladder, predicted (§5ᵀ) vs measured")
+    m = make_mesh_like_matrix(n, r_nz, locality_window=n // 64,
+                              long_range_frac=0.02, seed=1)
+    x_host = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    y_ref = spmv_t_ref_np(m, x_host)
+    hw = tune.measure_hardware(mesh, "data")
+    results = {}
+    preds = None
+    for strategy in rungs + ("auto",):
+        eng = DistributedSpMV(m, mesh, strategy=strategy,
+                              blocksize=n // 8 // 16, shards_per_node=1,
+                              transpose=True, hw=hw)
+        if preds is None:
+            preds = dict(select.rank_strategies(eng.splan, r_nz, hw,
+                                                direction="put"))
+        x = eng.shard_vector(x_host)
+        np.testing.assert_allclose(np.asarray(eng(x)), y_ref, rtol=2e-4,
+                                   atol=2e-4)
+        t = timeit(eng, x, iters=iters)
+        results[strategy] = t
+        if strategy == "auto":
+            best_fixed = min(v for s, v in results.items() if s != "auto")
+            order = ">".join(s for s, _ in sorted(preds.items(),
+                                                  key=lambda kv: kv[1]))
+            agree = eng.strategy == min(preds, key=preds.get)
+            csv_row("table3.scatter.spmv_transpose.auto", t * 1e6,
+                    f"resolved={eng.strategy} predicted_order={order} "
+                    f"pick_agrees_with_model={agree} "
+                    f"vs_best_fixed={t/best_fixed:.2f}x")
+        else:
+            t_pred = preds[strategy]
+            acc = min(t, t_pred) / max(t, t_pred)
+            c = eng.counts
+            vol = {"replicate": 8 * n,
+                   "blockwise": c.total_blockwise_volume()}.get(
+                       strategy, c.total_condensed_volume())
+            csv_row(f"table3.scatter.spmv_transpose.{strategy}", t * 1e6,
+                    f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
+                    f"vol_elems={vol}")
+
+    # -- moe_combine: weighted expert→token return --
+    n_tok, d = (1 << 12, 8) if smoke else (1 << 14, 32)
+    k, e_total = 2, 32
+    cap = int(1.25 * n_tok * k / e_total)
+    rng = np.random.default_rng(3)
+    weights = 1.0 / np.arange(1, e_total + 1)
+    weights /= weights.sum()
+    top_e = rng.choice(e_total, size=(n_tok, k), p=weights)
+    top_w = rng.random((n_tok, k)).astype(np.float32)
+    buf = rng.standard_normal((e_total, cap, d)).astype(np.float32)
+    idx, valid = moe_dispatch_pattern(top_e, n_tok, e_total, cap, 8)
+    w_slot = moe_combine_weights(top_e, top_w, n_tok, e_total, cap)
+    ref = moe_combine_ref(buf, idx, valid, w_slot, n_tok)
+    hw_tok = hw.replace(elem=4 * d)  # every moved element is a d-wide row
+    results = {}
+    preds = None
+    for strategy in rungs + ("auto",):
+        g = MoECombineScatter(top_e, top_w, n_tok, e_total, cap, mesh,
+                              strategy=strategy, blocksize=n_tok // 8 // 16,
+                              shards_per_node=1, hw=hw_tok)
+        if preds is None:
+            preds = dict(select.rank_strategies(g.splan, 1, hw_tok,
+                                                direction="put"))
+        b = g.shard_expert_buf(buf)
+        np.testing.assert_allclose(np.asarray(g(b)), ref, rtol=2e-4,
+                                   atol=2e-4)
+        t = timeit(g, b, iters=iters)
+        results[strategy] = t
+        if strategy == "auto":
+            best_fixed = min(v for s, v in results.items() if s != "auto")
+            agree = g.strategy == min(preds, key=preds.get)
+            csv_row("table3.scatter.moe_combine.auto", t * 1e6,
+                    f"resolved={g.strategy} "
+                    f"pick_agrees_with_model={agree} "
+                    f"vs_best_fixed={t/best_fixed:.2f}x")
+        else:
+            t_pred = preds[strategy]
+            acc = min(t, t_pred) / max(t, t_pred)
+            c = g.counts
+            vol = {"replicate": 8 * n_tok,
+                   "blockwise": c.total_blockwise_volume()}.get(
+                       strategy, c.total_condensed_volume())
+            csv_row(f"table3.scatter.moe_combine.{strategy}", t * 1e6,
                     f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
                     f"vol_elems={vol}")
     return results

@@ -1,15 +1,19 @@
-"""The workload-agnostic irregular-gather API, three consumers deep.
+"""The workload-agnostic irregular-communication API, five consumers deep.
 
 The paper's machinery — plan once (§4.3.1), pick a ladder rung (§4), price
-it with the §5 models — is exposed behind ``repro.comm``:
+it with the §5 models — is exposed behind ``repro.comm``, in both
+directions:
 
-  * ``SharedVector``   — a sharded vector with contiguous ownership,
-  * ``AccessPattern``  — the global index set each accessor touches,
-  * ``IrregularGather``— plans, autotunes, and gathers.
+  * ``SharedVector``    — a sharded vector with contiguous ownership,
+  * ``AccessPattern``   — the global index set each accessor touches,
+  * ``IrregularGather`` — pull: plans, autotunes, and gathers,
+  * ``IrregularScatter``— push: the same plan transposed, duplicate
+    targets combining under ``reduce="add"|"set"|"max"``.
 
-This example drives the raw API, then the three consumers built on it:
-``DistributedSpMV`` (the paper's workload), ``Heat2D`` (§8 stencil halos),
-and ``MoEDispatchGather`` (token→expert dispatch).
+This example drives the raw API, then the consumers built on it:
+``DistributedSpMV`` (the paper's workload, plus ``transpose=True`` for
+y = (D+A)ᵀx), ``Heat2D`` (§8 stencil halos), and the MoE pair
+(``MoEDispatchGather`` token→expert, ``MoECombineScatter`` expert→token).
 
 Run: python examples/irregular_gather.py   (re-execs itself with 8 devices)
 """
@@ -99,9 +103,32 @@ def destination_api(mesh):
           "via materialize=\"full\"\n")
 
 
+def scatter_api(mesh):
+    print("== push direction: IrregularScatter over the transposed plan ==")
+    from repro.comm import IrregularScatter
+
+    n = 1 << 14
+    sv = SharedVector(mesh, n=n, axis_name="data")
+    rng = np.random.default_rng(4)
+    idx = (np.arange(n)[:, None]
+           + rng.integers(-64, 65, size=(n, 8))).clip(0, n - 1)
+    pattern = AccessPattern.from_indices(idx.astype(np.int32), n=n)
+    s = IrregularScatter(pattern, sv, strategy="auto", reduce="add")
+    print(f"  resolved strategy={s.strategy} (put-model ranking); "
+          "scatter plan = gather plan transposed "
+          f"(round-trips: {s.splan.transpose() is s.plan})")
+    vals = rng.integers(-4, 5, size=idx.shape).astype(np.float32)
+    y = np.asarray(s(s.shard_values(vals)))
+    ref = np.zeros(n, np.float32)
+    np.add.at(ref, idx.ravel(), vals.ravel())
+    print(f"  scatter-add over {idx.size} contributions bit-exact: "
+          f"{np.array_equal(y, ref)}\n")
+
+
 def spmv_consumer(mesh):
     print("== consumer 1: DistributedSpMV (the paper's workload) ==")
-    from repro.core.matrix import make_mesh_like_matrix, spmv_ref_np
+    from repro.core.matrix import (make_mesh_like_matrix, spmv_ref_np,
+                                   spmv_t_ref_np)
     from repro.core.spmv import DistributedSpMV
 
     n = 1 << 14
@@ -113,7 +140,14 @@ def spmv_consumer(mesh):
     y = np.asarray(eng(eng.shard_vector(x)))
     err = np.abs(y - spmv_ref_np(m, x)).max()
     print(f"  auto -> {eng.strategy}, blocksize={eng.blocksize}, "
-          f"max_err={err:.2e}\n")
+          f"max_err={err:.2e}")
+    # the transposed product pushes partial products to the column owners
+    engt = DistributedSpMV(m, mesh, strategy="auto", shards_per_node=4,
+                           transpose=True)
+    yt = np.asarray(engt(engt.shard_vector(x)))
+    errt = np.abs(yt - spmv_t_ref_np(m, x)).max()
+    print(f"  transpose=True (y = Mᵀx) auto -> {engt.strategy}, "
+          f"max_err={errt:.2e}\n")
 
 
 def heat2d_consumer():
@@ -136,9 +170,11 @@ def heat2d_consumer():
 
 
 def moe_consumer(mesh):
-    print("== consumer 3: MoE dispatch (token->expert gather) ==")
-    from repro.models.moe import (MoEDispatchGather, moe_dispatch_pattern,
-                                  moe_dispatch_ref)
+    print("== consumer 3: MoE dispatch + combine (one plan, two directions) "
+          "==")
+    from repro.models.moe import (MoECombineScatter, MoEDispatchGather,
+                                  moe_combine_ref, moe_combine_weights,
+                                  moe_dispatch_pattern, moe_dispatch_ref)
 
     n_tok, k, d, e_total = 1 << 13, 2, 16, 32
     cap = int(1.25 * n_tok * k / e_total)
@@ -150,11 +186,22 @@ def moe_consumer(mesh):
     buf = np.asarray(g(g.shard_tokens(x)))
     idx, valid = moe_dispatch_pattern(top_e, n_tok, e_total, cap, 8)
     ref = moe_dispatch_ref(x, idx, valid, e_total, cap)
-    print(f"  auto -> {g.strategy}; expert buffers {buf.shape}; "
+    print(f"  dispatch auto -> {g.strategy}; expert buffers {buf.shape}; "
           f"bit-exact={np.array_equal(buf, ref)}")
     c = g.counts
     print(f"  condensed moves {c.total_condensed_volume()} of "
           f"{n_tok} token vectors; replicate would move {8 * n_tok}")
+
+    # the return path: weighted expert->token combine over the SAME plan
+    top_w = rng.random((n_tok, k)).astype(np.float32)
+    comb = MoECombineScatter(top_e, top_w, n_tok, e_total, cap, mesh,
+                             strategy="auto",
+                             hw=pm.ABEL.replace(elem=4 * d))
+    y = np.asarray(comb(comb.shard_expert_buf(buf)))
+    w_slot = moe_combine_weights(top_e, top_w, n_tok, e_total, cap)
+    want = moe_combine_ref(buf, idx, valid, w_slot, n_tok)
+    print(f"  combine auto -> {comb.strategy}; tokens back {y.shape}; "
+          f"max_err={np.abs(y - want).max():.2e}")
 
 
 def main():
@@ -162,6 +209,7 @@ def main():
                             axis_types=compat.auto_axis_types(1))
     raw_api(mesh)
     destination_api(mesh)
+    scatter_api(mesh)
     spmv_consumer(mesh)
     heat2d_consumer()
     moe_consumer(mesh)

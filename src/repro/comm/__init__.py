@@ -1,11 +1,16 @@
 """repro.comm — the paper's irregular-communication runtime, workload-agnostic.
 
 The optimization unit is an ``AccessPattern`` (which global elements of a
-``SharedVector`` does each accessor touch), not any one workload.
-``IrregularGather`` is the single front door: it plans once (§4.3.1,
-persistently cached), picks a ladder rung (§4) by hand or by the §5 models
-(``strategy="auto"``, ``blocksize="auto"``), and exposes both a standalone
-gather and ``shard_map``-local functions — including the ``OverlapHandle``
+``SharedVector`` does each accessor touch), not any one workload — and not
+any one *direction*: ``IrregularGather`` (pull — accessors read their
+elements) and ``IrregularScatter`` (push — accessors contribute to their
+elements, duplicates combining under ``reduce="add"|"set"|"max"``) are the
+two front doors over one shared exchange core.  Each plans once (§4.3.1,
+persistently cached; the scatter plan is the gather plan with send/recv
+tables swapped, ``CommPlan.transpose()``), picks a ladder rung (§4) by hand
+or by the §5 models (``strategy="auto"``, ``blocksize="auto"`` — put-model
+pricing for scatters), and exposes both a standalone call and
+``shard_map``-local functions — including the handle-based
 start/compute/finish protocol that generalizes the own/foreign split.
 
 A ``Destination`` descriptor names *where* gathered values land (halo
@@ -15,27 +20,33 @@ consumer's named slots — O(slots + recv) work — instead of assembling the
 O(n) full-length private copy (still available via
 ``finish(materialize="full")``).
 
-Consumers: ``repro.core.spmv`` (the paper's workload), ``repro.core.heat2d``
-(§8 stencil halos), ``repro.models.moe`` (token→expert dispatch).  See
+Consumers: ``repro.core.spmv`` (the paper's workload, plus its transposed
+product ``transpose=True`` via scatter-accumulate), ``repro.core.heat2d``
+(§8 stencil halos), ``repro.models.moe`` (token→expert dispatch gather and
+its inverse, the weighted expert→token combine scatter).  See
 ``docs/comm_api.md`` for the API walkthrough and ``docs/perf_model.md`` for
 the paper-formula-to-code map.
 """
 from repro.comm.pattern import AccessPattern, Destination
 from repro.comm.shared import SharedVector
-from repro.comm.plan import (CommPlan, GatherCounts, Topology,
+from repro.comm.plan import (CommPlan, GatherCounts, ScatterPlan, Topology,
                              attach_destination, build_comm_plan,
-                             blockwise_block_counts)
-from repro.comm.plan_cache import get_comm_plan
-from repro.comm.strategies import STRATEGIES
+                             blockwise_block_counts, derive_scatter_plan)
+from repro.comm.plan_cache import get_comm_plan, get_scatter_plan
+from repro.comm.strategies import SCATTER_REDUCES, STRATEGIES
+from repro.comm.exchange import IrregularExchange
 from repro.comm.gather import IrregularGather, OverlapHandle
+from repro.comm.scatter import IrregularScatter, ScatterHandle
 from repro.comm import plan, plan_cache, pattern, shared, strategies, select
-from repro.comm import gather
+from repro.comm import exchange, gather, scatter
 
 __all__ = [
-    "AccessPattern", "Destination", "SharedVector", "IrregularGather",
-    "OverlapHandle", "CommPlan", "GatherCounts", "Topology",
+    "AccessPattern", "Destination", "SharedVector", "IrregularExchange",
+    "IrregularGather", "IrregularScatter", "OverlapHandle", "ScatterHandle",
+    "CommPlan", "GatherCounts", "ScatterPlan", "Topology",
     "attach_destination", "build_comm_plan", "blockwise_block_counts",
-    "get_comm_plan", "STRATEGIES",
+    "derive_scatter_plan", "get_comm_plan", "get_scatter_plan",
+    "STRATEGIES", "SCATTER_REDUCES",
     "plan", "plan_cache", "pattern", "shared", "strategies", "select",
-    "gather",
+    "exchange", "gather", "scatter",
 ]

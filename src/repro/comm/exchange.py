@@ -1,0 +1,226 @@
+"""Direction-agnostic exchange core — shared by gather (pull) and scatter
+(push).
+
+The paper's machinery is symmetric in direction: the one-time plan, the
+strategy rung ladder, the §5 pricing, and the start/compute/finish overlap
+protocol all depend only on *which elements cross which (sender, receiver)
+boundary*, never on which side initiates the transfer.  ``IrregularExchange``
+owns everything that is common to both directions for one
+``AccessPattern`` on one mesh:
+
+* mesh / ``SharedVector`` resolution and partitioning checks,
+* BLOCKSIZE resolution (fixed or eq.-11 ``"auto"``),
+* the cached destination-independent base ``CommPlan``,
+* strategy resolution (any rung or ``"auto"`` via ``select.rank_strategies``
+  with the subclass's direction — get-models for ``IrregularGather``,
+  put-models for ``IrregularScatter``),
+* one-per-mesh hardware calibration (memoized module-wide, see
+  ``measure_hw``),
+* the ``OverlapHandle`` protocol type.
+
+Subclasses implement ``_bind`` to wire the resolved strategy to their
+direction's ``shard_map``-local functions (``repro.comm.strategies``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm import plan_cache
+from repro.comm import select
+from repro.comm import strategies as strat
+from repro.comm.pattern import AccessPattern
+from repro.comm.plan import CommPlan, Topology
+from repro.comm.shared import SharedVector, axis_size
+
+__all__ = ["IrregularExchange", "OverlapHandle", "measure_hw",
+           "clear_hw_memo"]
+
+
+# One microbenchmark per (device set, axis) for the life of the process:
+# constructing several gathers/scatters on the same mesh must not re-run
+# the §5.4 latency/bandwidth calibration each time.  (repro.core.tune keeps
+# its own cache too; this memo also skips its import and probe overhead on
+# every construction after the first.)
+_HW_MEMO: dict[tuple, object] = {}
+
+
+def _hw_key(mesh, axis_name) -> tuple:
+    axis = tuple(axis_name) if isinstance(axis_name, (tuple, list)) \
+        else axis_name
+    # the axis *size* must participate: the same devices factorized
+    # (2, 4) vs (4, 2) calibrate different ring lengths on the same name
+    return (tuple(d.id for d in mesh.devices.flat), mesh.axis_names, axis,
+            axis_size(mesh, axis_name))
+
+
+def clear_hw_memo() -> None:
+    _HW_MEMO.clear()
+
+
+def measure_hw(mesh, axis_name):
+    """§5.4 hardware parameters for one mesh axis, memoized per
+    (mesh devices, axis_name)."""
+    key = _hw_key(mesh, axis_name)
+    if key not in _HW_MEMO:
+        from repro.core import tune
+        if isinstance(axis_name, (tuple, list)):
+            # multi-axis exchange: calibrate over the whole visible device
+            # set (the parameters describe the machine, not the mesh
+            # factorization)
+            _HW_MEMO[key] = tune.measure_hardware()
+        else:
+            _HW_MEMO[key] = tune.measure_hardware(mesh, axis_name)
+    return _HW_MEMO[key]
+
+
+@dataclasses.dataclass
+class OverlapHandle:
+    """An in-flight exchange: the collective has been issued, the landed
+    messages are not yet delivered.  Everything computed before ``finish``
+    that only reads the local operand runs inside the communication window.
+
+    For a gather, ``finish`` has two materializations:
+
+    * ``materialize="full"`` — assemble the classic device-private
+      ``x_copy`` (length >= n, indexable with global indices);
+    * ``materialize="dest"`` — requires the gather to own a ``Destination``:
+      scatter the landed recv buffer straight into the consumer's named
+      slots and return ``{name: (slot_shape..., feat...) array}``.  No
+      full-length intermediate is built — O(slots + recv) work.
+
+    The default is ``"dest"`` when the gather was constructed with a
+    ``Destination``, else ``"full"``.
+
+    For a scatter (push), ``finish`` takes no options: it runs the
+    own-accumulate (no dependency on the collective, so it overlaps) and
+    combines the landed foreign contributions into the owned slice.
+    """
+
+    x_local: jax.Array
+    _finish: Callable[..., jax.Array]
+
+    def finish(self, *, extra_slots: int = 0, copy_own: bool = True,
+               materialize: str | None = None):
+        """Deliver the landed messages (see class docstring for modes).
+
+        ``extra_slots`` (gather, full mode): number of guaranteed-zero
+        slots appended after the recv dump — x_copy[n+1 .. n+extra_slots]
+        read as 0 for any strategy, so consumers can point padding indices
+        there.  ``copy_own=False`` (gather, full mode) skips the eq.-14
+        own-shard memcpy for consumers that read their own shard from
+        ``x_local`` directly.
+        """
+        return self._finish(extra_slots=extra_slots, copy_own=copy_own,
+                            materialize=materialize)
+
+
+class IrregularExchange:
+    """Plan + strategy + device state for one ``AccessPattern`` over one
+    mesh axis (or tuple of axes), in one direction.
+
+    ``direction`` is a class attribute: ``"get"`` (gather — accessors pull
+    the elements they read) or ``"put"`` (scatter — accessors push
+    contributions to the elements they write); it selects which §5 model
+    family prices ``strategy="auto"``.
+    """
+
+    direction = "get"
+
+    def __init__(
+        self,
+        pattern: AccessPattern,
+        where: jax.sharding.Mesh | SharedVector,
+        *,
+        axis_name: str | tuple = "data",
+        strategy: str = "auto",
+        blocksize: int | str | None = None,
+        shards_per_node: int | None = None,
+        topology: Topology | None = None,
+        hw=None,
+        candidates=None,
+        use_plan_cache: bool = True,
+    ):
+        if isinstance(where, SharedVector):
+            assert where.n == pattern.n, (where.n, pattern.n)
+            mesh = where.mesh
+            axis_name = where.axis_name
+            topology = topology or where.topology
+        else:
+            mesh = where
+        valid = strat.STRATEGIES + ("auto",)
+        if strategy not in valid:
+            raise ValueError(f"strategy must be one of {valid}")
+        self.pattern = pattern
+        self.mesh = mesh
+        self.axis_name = axis_name
+        p = axis_size(mesh, axis_name)
+        self.p = p
+        n = pattern.n
+        assert n % p == 0, "pad the vector so n divides the mesh axis"
+        assert pattern.m % p == 0, "pad the pattern so m divides the mesh axis"
+        if topology is None:
+            topology = Topology(p, shards_per_node or p)
+
+        if blocksize == "auto":
+            if hw is None:
+                hw = measure_hw(mesh, axis_name)
+            blocksize = select.choose_blocksize(
+                pattern.indices, n, p, topology=topology, hw=hw)
+        # destination-independent base plan first: the strategy resolves
+        # against it, and any direction- or consumer-specific delta (the
+        # scatter executor tables, a Destination descriptor) is attached
+        # only afterwards
+        base_plan: CommPlan = plan_cache.get_comm_plan(
+            pattern.indices, n, p, blocksize=blocksize, topology=topology,
+            cache=use_plan_cache,
+        )
+        self._use_plan_cache = use_plan_cache
+        self._prepare(base_plan)
+
+        self.requested_strategy = strategy
+        self.predicted_times: dict[str, float] | None = None
+        if strategy == "auto":
+            if hw is None:
+                hw = measure_hw(mesh, axis_name)
+            ranked = select.rank_strategies(
+                self._ranking_plan(base_plan), pattern.r, hw,
+                candidates=candidates, direction=self.direction,
+                **self._price_kwargs())
+            self.predicted_times = dict(ranked)
+            strategy = ranked[0][0]
+        self.strategy = strategy
+        self.hw = hw
+
+        self._bind(base_plan, strategy)
+
+    # ---- subclass hooks ----
+    def _prepare(self, base_plan: CommPlan) -> None:
+        """Derive direction-specific plan state before strategy resolution."""
+
+    def _ranking_plan(self, base_plan: CommPlan):
+        """The plan whose counts feed the §5 ranking (base by default)."""
+        return base_plan
+
+    def _price_kwargs(self) -> dict:
+        """Extra ``rank_strategies`` kwargs (e.g. gather unpack pricing)."""
+        return {}
+
+    def _bind(self, base_plan: CommPlan, strategy: str) -> None:
+        """Wire the resolved strategy: set ``self.plan`` / ``plan_args`` /
+        ``in_specs`` / local start+finish and the standalone jit."""
+        raise NotImplementedError
+
+    # ---- shared surface ----
+    def shard_vector(self, x) -> jax.Array:
+        """Place host values on the mesh in the plan's contiguous layout."""
+        return jax.device_put(
+            x, NamedSharding(self.mesh, P(self.axis_name)))
+
+    @property
+    def counts(self):
+        """The plan's exact per-shard volume counts (§5.2 model inputs)."""
+        return self.plan.counts

@@ -1,9 +1,13 @@
-"""IrregularGather — the single front door to the strategy ladder.
+"""IrregularGather — the pull-direction front door to the strategy ladder.
 
 One object owns everything the paper's §4 machinery needs for one access
 pattern on one mesh: the one-time ``CommPlan`` (persistently cached), the
 resolved strategy (any ladder rung or ``"auto"`` via the §5 models), the
 device-resident plan arrays, and the ``shard_map``-local gather functions.
+The direction-agnostic machinery (plan resolution, rung dispatch, hardware
+calibration memo, the ``OverlapHandle`` protocol) lives in
+``repro.comm.exchange`` and is shared with the push-direction
+``IrregularScatter``.
 
 Consumers compose it two ways:
 
@@ -47,87 +51,42 @@ walkthroughs of every surface.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
-
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.comm import plan_cache
-from repro.comm import select
 from repro.comm import strategies as strat
+from repro.comm.exchange import (IrregularExchange, OverlapHandle,
+                                 measure_hw)
 from repro.comm.pattern import AccessPattern, Destination
-from repro.comm.plan import CommPlan, Topology
-from repro.comm.shared import SharedVector, axis_size
+from repro.comm.plan import CommPlan
+from repro.comm.shared import SharedVector
 
 __all__ = ["IrregularGather", "OverlapHandle"]
 
 
-@dataclasses.dataclass
-class OverlapHandle:
-    """An in-flight gather: the collective has been issued, the landed
-    messages are not yet delivered.  Everything computed before ``finish``
-    that only reads ``x_local`` runs inside the communication window.
-
-    ``finish`` has two materializations:
-
-    * ``materialize="full"`` — assemble the classic device-private
-      ``x_copy`` (length >= n, indexable with global indices);
-    * ``materialize="dest"`` — requires the gather to own a ``Destination``:
-      scatter the landed recv buffer straight into the consumer's named
-      slots and return ``{name: (slot_shape..., feat...) array}``.  No
-      full-length intermediate is built — O(slots + recv) work.
-
-    The default is ``"dest"`` when the gather was constructed with a
-    ``Destination``, else ``"full"``.
-    """
-
-    x_local: jax.Array
-    _finish: Callable[..., jax.Array]
-
-    def finish(self, *, extra_slots: int = 0, copy_own: bool = True,
-               materialize: str | None = None):
-        """Deliver the landed messages (see class docstring for modes).
-
-        ``extra_slots`` (full mode): number of guaranteed-zero slots
-        appended after the recv dump — x_copy[n+1 .. n+extra_slots] read as
-        0 for any strategy, so consumers can point padding indices there.
-        ``copy_own=False`` (full mode) skips the eq.-14 own-shard memcpy for
-        consumers that read their own shard from ``x_local`` directly.
-        """
-        return self._finish(extra_slots=extra_slots, copy_own=copy_own,
-                            materialize=materialize)
-
-
 def _measure_hw(mesh, axis_name):
-    from repro.core import tune
-    if isinstance(axis_name, (tuple, list)):
-        # multi-axis gather: calibrate over the whole visible device set
-        # (the parameters describe the machine, not the mesh factorization)
-        return tune.measure_hardware()
-    return tune.measure_hardware(mesh, axis_name)
+    """Deprecated alias — use ``repro.comm.exchange.measure_hw`` (memoized
+    per (mesh, axis_name) so repeated constructions skip the
+    microbenchmark)."""
+    return measure_hw(mesh, axis_name)
 
 
-class IrregularGather:
+class IrregularGather(IrregularExchange):
     """Plan + strategy + device state for gathering one ``AccessPattern``
     over one mesh axis (or tuple of axes)."""
+
+    direction = "get"
 
     def __init__(
         self,
         pattern: AccessPattern,
         where: jax.sharding.Mesh | SharedVector,
         *,
-        axis_name: str | tuple = "data",
-        strategy: str = "auto",
-        blocksize: int | str | None = None,
-        shards_per_node: int | None = None,
-        topology: Topology | None = None,
         destination: Destination | None = None,
         dest_slots: int | None = None,
-        hw=None,
-        candidates=None,
-        use_plan_cache: bool = True,
+        **kwargs,
     ):
         """``destination`` may be a ``Destination`` or a callable
         ``(resolved_strategy, base_plan) -> Destination`` for consumers
@@ -136,71 +95,36 @@ class IrregularGather:
         attached once, after strategy resolution, so no throwaway plan
         entry is ever cached.  ``dest_slots`` is the flattened slot count
         the auto ranking prices when ``destination`` is a callable (a
-        plain ``Destination`` knows its own)."""
-        if isinstance(where, SharedVector):
-            assert where.n == pattern.n, (where.n, pattern.n)
-            mesh = where.mesh
-            axis_name = where.axis_name
-            topology = topology or where.topology
+        plain ``Destination`` knows its own).  Remaining keyword arguments
+        (``axis_name``, ``strategy``, ``blocksize``, ``shards_per_node``,
+        ``topology``, ``hw``, ``candidates``, ``use_plan_cache``) are the
+        shared ``IrregularExchange`` surface."""
+        self._destination_arg = destination
+        self._dest_slots = dest_slots
+        super().__init__(pattern, where, **kwargs)
+
+    def _price_kwargs(self) -> dict:
+        destination = self._destination_arg
+        if destination is None:
+            return {}
+        # with a destination, price the targeted O(slots + recv) unpack
+        # instead of the O(n) full-copy assembly (§5 + the new term)
+        if callable(destination):
+            if self._dest_slots is None:
+                raise ValueError(
+                    'strategy="auto" with a callable destination '
+                    "requires dest_slots= — the flattened slot "
+                    "count the ranking prices (otherwise the "
+                    "targeted unpack would be priced at 0 slots "
+                    "and skew the rung selection)")
+            slots = self._dest_slots
         else:
-            mesh = where
-        valid = strat.STRATEGIES + ("auto",)
-        if strategy not in valid:
-            raise ValueError(f"strategy must be one of {valid}")
-        self.pattern = pattern
-        self.mesh = mesh
-        self.axis_name = axis_name
-        p = axis_size(mesh, axis_name)
-        self.p = p
-        n = pattern.n
-        assert n % p == 0, "pad the vector so n divides the mesh axis"
-        assert pattern.m % p == 0, "pad the pattern so m divides the mesh axis"
-        if topology is None:
-            topology = Topology(p, shards_per_node or p)
+            slots = destination.num_slots
+        return {"materialize": "dest", "dest_slots": slots}
 
-        if blocksize == "auto":
-            if hw is None:
-                hw = _measure_hw(mesh, axis_name)
-            blocksize = select.choose_blocksize(
-                pattern.indices, n, p, topology=topology, hw=hw)
-        # destination-independent base plan first: the strategy resolves
-        # against it, and the (possibly strategy-dependent) destination is
-        # attached only afterwards — exactly one dest-keyed cache entry
-        base_plan: CommPlan = plan_cache.get_comm_plan(
-            pattern.indices, n, p, blocksize=blocksize, topology=topology,
-            cache=use_plan_cache,
-        )
-
-        self.requested_strategy = strategy
-        self.predicted_times: dict[str, float] | None = None
-        if strategy == "auto":
-            if hw is None:
-                hw = _measure_hw(mesh, axis_name)
-            # with a destination, price the targeted O(slots + recv) unpack
-            # instead of the O(n) full-copy assembly (§5 + the new term)
-            if destination is None:
-                price_mode, price_slots = None, None
-            else:
-                price_mode = "dest"
-                if callable(destination):
-                    if dest_slots is None:
-                        raise ValueError(
-                            'strategy="auto" with a callable destination '
-                            "requires dest_slots= — the flattened slot "
-                            "count the ranking prices (otherwise the "
-                            "targeted unpack would be priced at 0 slots "
-                            "and skew the rung selection)")
-                    price_slots = dest_slots
-                else:
-                    price_slots = destination.num_slots
-            ranked = select.rank_strategies(
-                base_plan, pattern.r, hw, candidates=candidates,
-                materialize=price_mode, dest_slots=price_slots)
-            self.predicted_times = dict(ranked)
-            strategy = ranked[0][0]
-        self.strategy = strategy
-        self.hw = hw
-
+    def _bind(self, base_plan: CommPlan, strategy: str) -> None:
+        mesh, axis_name, p, n = self.mesh, self.axis_name, self.p, self.pattern.n
+        destination = self._destination_arg
         if callable(destination):
             destination = destination(strategy, base_plan)
         if destination is not None:
@@ -210,9 +134,9 @@ class IrregularGather:
             assert destination.indices.max() < n, (
                 "destination indices must lie in [-1, n)")
             self.plan: CommPlan = plan_cache.get_comm_plan(
-                pattern.indices, n, p, blocksize=blocksize,
-                topology=topology, destination=destination,
-                base=base_plan, cache=use_plan_cache,
+                self.pattern.indices, n, p, blocksize=base_plan.blocksize,
+                topology=base_plan.topology, destination=destination,
+                base=base_plan, cache=self._use_plan_cache,
             )
         else:
             self.plan = base_plan
@@ -287,11 +211,6 @@ class IrregularGather:
         return OverlapHandle(x_local=x_local, _finish=finish)
 
     # ---- standalone surface ----
-    def shard_vector(self, x) -> jax.Array:
-        """Place host values on the mesh in the plan's contiguous layout."""
-        return jax.device_put(
-            x, NamedSharding(self.mesh, P(self.axis_name)))
-
     def __call__(self, x: jax.Array) -> jax.Array:
         """(P, >=n, ...) array: row q is device q's private x_copy.
 
@@ -299,8 +218,3 @@ class IrregularGather:
         the global-indexable copy), regardless of any ``Destination``.
         """
         return self._gather_all(x, *self.plan_args)
-
-    @property
-    def counts(self):
-        """The plan's exact per-shard volume counts (§5.2 model inputs)."""
-        return self.plan.counts

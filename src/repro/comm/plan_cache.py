@@ -29,15 +29,18 @@ import dataclasses
 import hashlib
 import os
 import tempfile
+import threading
 import warnings
 
 import numpy as np
 
-from repro.comm.plan import (CommPlan, GatherCounts, Topology,
-                             attach_destination, build_comm_plan)
+from repro.comm.plan import (CommPlan, GatherCounts, ScatterPlan, Topology,
+                             attach_destination, build_comm_plan,
+                             derive_scatter_plan)
 
-__all__ = ["plan_key", "get_comm_plan", "clear_memory_cache", "stats",
-           "CacheStats", "cache_dir", "StalePlanCacheError"]
+__all__ = ["plan_key", "get_comm_plan", "get_scatter_plan",
+           "clear_memory_cache", "stats", "CacheStats", "cache_dir",
+           "StalePlanCacheError"]
 
 # Bump when the CommPlan field set/serialization changes OR when
 # build_comm_plan's output semantics change for the same inputs (planner bug
@@ -46,7 +49,9 @@ __all__ = ["plan_key", "get_comm_plan", "clear_memory_cache", "stats",
 # v2: accessor-row count ``m`` decoupled from vector length ``n``.
 # v3: optional ``Destination`` descriptor (consumer-targeted unpack arrays
 #     ``dest_*``); the destination content participates in the key.
-_FORMAT_VERSION = 3
+# v4: transpose-derived scatter (put-direction) executor tables, stored as
+#     O(m*r) delta entries referencing the direction-agnostic base plan.
+_FORMAT_VERSION = 4
 
 # fields serialized verbatim as arrays
 _PLAN_ARRAYS = ("send_counts", "send_local_idx", "recv_global_idx",
@@ -55,6 +60,10 @@ _PLAN_ARRAYS = ("send_counts", "send_local_idx", "recv_global_idx",
 # destination arrays, present only when the plan was built with one
 _DEST_ARRAYS = ("dest_own_idx", "dest_own_mask", "dest_rem_mask",
                 "dest_cond_src", "dest_blk_src", "dest_global_idx")
+# scatter (put-direction) delta arrays; a scatter entry stores these plus
+# its put-direction counts and a reference to the base (gather) entry
+_SCATTER_ARRAYS = ("tgt_global", "cond_msg_idx", "blk_msg_idx",
+                   "own_tgt_idx", "win_mask", "touched")
 
 
 class StalePlanCacheError(ValueError):
@@ -75,10 +84,17 @@ _COUNT_SCALARS = ("blocksize", "padded_condensed_per_shard",
 class CacheStats:
     memory_hits: int = 0
     disk_hits: int = 0
-    misses: int = 0     # full plan builds performed
+    misses: int = 0     # full O(nnz) plan builds performed
+    derives: int = 0    # scatter-delta derivations performed
 
     def reset(self) -> None:
-        self.memory_hits = self.disk_hits = self.misses = 0
+        self.memory_hits = self.disk_hits = self.misses = self.derives = 0
+
+    def bump(self, field: str) -> None:
+        """Increment one counter under the cache lock — a bare ``+= 1``
+        loses increments under the concurrent access this module supports."""
+        with _memory_lock:
+            setattr(self, field, getattr(self, field) + 1)
 
     @property
     def hits(self) -> int:
@@ -87,8 +103,12 @@ class CacheStats:
 
 stats = CacheStats()
 # LRU-bounded: long-lived processes sweeping many matrices must not retain
-# every plan ever built (large partitionings are hundreds of MB each)
-_memory: "collections.OrderedDict[str, CommPlan]" = collections.OrderedDict()
+# every plan ever built (large partitionings are hundreds of MB each).
+# Every access goes through _memory_get/_memory_put/clear_memory_cache
+# under _memory_lock: get-then-move_to_end is not atomic on its own, and a
+# concurrent clear between the two steps raises KeyError.
+_memory: "collections.OrderedDict[str, object]" = collections.OrderedDict()
+_memory_lock = threading.Lock()
 
 
 def _max_memory_entries() -> int:
@@ -96,14 +116,24 @@ def _max_memory_entries() -> int:
 
 
 def clear_memory_cache() -> None:
-    _memory.clear()
+    with _memory_lock:
+        _memory.clear()
 
 
-def _memory_put(key: str, plan: CommPlan) -> None:
-    _memory[key] = plan
-    _memory.move_to_end(key)
-    while len(_memory) > max(1, _max_memory_entries()):
-        _memory.popitem(last=False)
+def _memory_get(key: str):
+    with _memory_lock:
+        plan = _memory.get(key)
+        if plan is not None:
+            _memory.move_to_end(key)
+        return plan
+
+
+def _memory_put(key: str, plan) -> None:
+    with _memory_lock:
+        _memory[key] = plan
+        _memory.move_to_end(key)
+        while len(_memory) > max(1, _max_memory_entries()):
+            _memory.popitem(last=False)
 
 
 def cache_dir() -> str:
@@ -123,7 +153,7 @@ def _max_disk_bytes() -> int:
 
 def _key_for_version(
     version: int, cols: np.ndarray, n: int, p: int, blocksize: int,
-    topology: Topology, destination=None,
+    topology: Topology, destination=None, scatter: bool = False,
 ) -> str:
     cols = np.ascontiguousarray(np.asarray(cols, dtype=np.int32))
     h = hashlib.sha256()
@@ -134,28 +164,31 @@ def _key_for_version(
     if destination is not None:
         h.update(b"|dest|")
         h.update(destination.key_bytes())
+    if scatter:
+        h.update(b"|scatter|")
     return h.hexdigest()
 
 
 def plan_key(
     cols: np.ndarray, n: int, p: int, blocksize: int, topology: Topology,
-    destination=None,
+    destination=None, scatter: bool = False,
 ) -> str:
     """Content hash of every input ``build_comm_plan`` depends on.
 
     A plan built with a ``Destination`` descriptor hashes the destination
     content too, so the same access pattern with different consumer slot
-    tables yields distinct cache entries.
+    tables yields distinct cache entries; ``scatter=True`` keys the
+    transpose-derived put-direction delta for the same pattern.
     """
     return _key_for_version(_FORMAT_VERSION, cols, n, p, blocksize,
-                            topology, destination)
+                            topology, destination, scatter)
 
 
 # On-disk formats this build knows how to *recognize* (not read): their
 # version prefix participated in the content key, so a newer build would
 # otherwise never open them and the orphans would silently count against
 # REPRO_PLAN_CACHE_MAX_BYTES forever.
-_LEGACY_VERSIONS = (2,)
+_LEGACY_VERSIONS = (2, 3)
 
 
 def _evict_stale_entries(cols, n, p, blocksize, topology) -> None:
@@ -172,8 +205,8 @@ def _evict_stale_entries(cols, n, p, blocksize, topology) -> None:
             warnings.warn(
                 f"plan-cache entry {os.path.basename(path)} was written by "
                 f"a v{old}-format build; this build reads "
-                f"v{_FORMAT_VERSION} (v3 added the Destination "
-                "targeted-unpack arrays) — the stale entry is deleted and "
+                f"v{_FORMAT_VERSION} (v4 added the transpose-derived "
+                "scatter executor tables) — the stale entry is deleted and "
                 "the plan rebuilt", stacklevel=3)
             try:
                 os.unlink(path)
@@ -215,9 +248,9 @@ def _check_version(meta) -> None:
     if found != _FORMAT_VERSION:
         raise StalePlanCacheError(
             f"plan-cache entry has format v{found} but this build reads "
-            f"v{_FORMAT_VERSION} (v3 added the Destination targeted-unpack "
-            f"arrays); the entry is ignored and the plan rebuilt — delete "
-            f"{cache_dir()} to clear stale entries")
+            f"v{_FORMAT_VERSION} (v4 added the transpose-derived scatter "
+            f"executor tables); the entry is ignored and the plan rebuilt "
+            f"— delete {cache_dir()} to clear stale entries")
 
 
 def _deserialize(data) -> CommPlan:
@@ -247,7 +280,23 @@ def _disk_path(key: str) -> str:
     return os.path.join(cache_dir(), f"{key}.npz")
 
 
-def _load_disk(key: str) -> CommPlan | None:
+def _serialize_scatter(splan: ScatterPlan, base_key: str) -> dict:
+    """Scatter entries are always deltas: the O(m*r) executor tables plus
+    the put-direction counts and a reference to the base (gather) entry —
+    the O(nnz) base arrays are never duplicated on disk per direction."""
+    out = {name: getattr(splan, name) for name in _SCATTER_ARRAYS}
+    for name in _COUNT_ARRAYS:
+        out[f"counts.{name}"] = getattr(splan.counts, name)
+    out["base_key"] = np.frombuffer(
+        base_key.encode("ascii"), dtype=np.uint8).copy()
+    out["meta"] = np.array(
+        [_FORMAT_VERSION]
+        + [getattr(splan.counts, name) for name in _COUNT_SCALARS],
+        dtype=np.int64)
+    return out
+
+
+def _load_disk(key: str) -> CommPlan | ScatterPlan | None:
     path = _disk_path(key)
     if not os.path.exists(path):
         return None
@@ -255,20 +304,38 @@ def _load_disk(key: str) -> CommPlan | None:
         with np.load(path) as data:
             if "base_key" not in data.files:
                 return _deserialize(data)
-            # destination delta: dest arrays + a reference to the base
+            # delta entry (destination or scatter): small arrays + a
+            # reference to the direction-agnostic base entry
             meta = data["meta"]
             _check_version(meta)
             base_key = data["base_key"].tobytes().decode("ascii")
-            dest_len = int(meta[15])
-            dest = {name: np.asarray(data[name]) for name in _DEST_ARRAYS}
-        base = _memory.get(base_key)
+            is_scatter = "tgt_global" in data.files
+            if is_scatter:
+                delta = {name: np.asarray(data[name])
+                         for name in _SCATTER_ARRAYS}
+                counts = GatherCounts(
+                    **{name: np.asarray(data[f"counts.{name}"])
+                       for name in _COUNT_ARRAYS},
+                    blocksize=int(meta[1]),
+                    padded_condensed_per_shard=int(meta[2]),
+                    padded_blockwise_per_shard=int(meta[3]),
+                )
+            else:
+                dest_len = int(meta[15])
+                dest = {name: np.asarray(data[name])
+                        for name in _DEST_ARRAYS}
+        base = _memory_get(base_key)
+        if not isinstance(base, CommPlan):
+            base = None
         if base is None:
             base = _load_disk(base_key)
         if base is None:
             return None  # base evicted; caller re-derives from scratch
+        if is_scatter:
+            return ScatterPlan(base=base, counts=counts, **delta)
         return dataclasses.replace(base, dest_len=dest_len, **dest)
     except StalePlanCacheError as e:
-        # v2 (or older) entry: reject loudly with the migration message and
+        # pre-v4 entry: reject loudly with the migration message and
         # rebuild — never reinterpret old bytes as a current-format plan
         warnings.warn(str(e), stacklevel=2)
         return None
@@ -277,8 +344,7 @@ def _load_disk(key: str) -> CommPlan | None:
         return None
 
 
-def _store_disk(key: str, plan: CommPlan, base_key: str | None = None) -> None:
-    data = _serialize(plan, base_key)
+def _store_disk_data(key: str, data: dict) -> None:
     if sum(a.nbytes for a in data.values()) > _max_disk_bytes():
         return  # memory-only: don't let huge plans fill the disk
     path = _disk_path(key)
@@ -291,6 +357,10 @@ def _store_disk(key: str, plan: CommPlan, base_key: str | None = None) -> None:
     except Exception:
         if os.path.exists(tmp):
             os.unlink(tmp)
+
+
+def _store_disk(key: str, plan: CommPlan, base_key: str | None = None) -> None:
+    _store_disk_data(key, _serialize(plan, base_key))
 
 
 def get_comm_plan(
@@ -320,19 +390,18 @@ def get_comm_plan(
     if not (cache and _enabled()):
         if destination is not None and base is not None:
             return attach_destination(base, destination)
-        stats.misses += 1
+        stats.bump("misses")
         return build_comm_plan(cols, n, p, blocksize=blocksize,
                                topology=topology, destination=destination)
 
     key = plan_key(cols, n, p, bs, topo, destination)
-    plan = _memory.get(key)
-    if plan is not None:
-        stats.memory_hits += 1
-        _memory.move_to_end(key)
+    plan = _memory_get(key)
+    if isinstance(plan, CommPlan):
+        stats.bump("memory_hits")
         return plan
     plan = _load_disk(key)
     if plan is not None:
-        stats.disk_hits += 1
+        stats.bump("disk_hits")
         _memory_put(key, plan)
         return plan
 
@@ -347,9 +416,61 @@ def get_comm_plan(
         _store_disk(key, plan, base_key=plan_key(cols, n, p, bs, topo))
     else:
         _evict_stale_entries(cols, n, p, bs, topo)
-        stats.misses += 1
+        stats.bump("misses")
         plan = build_comm_plan(cols, n, p, blocksize=blocksize,
                                topology=topology)
         _memory_put(key, plan)
         _store_disk(key, plan)
     return plan
+
+
+def get_scatter_plan(
+    cols: np.ndarray,
+    n: int,
+    p: int,
+    *,
+    blocksize: int | None = None,
+    topology: Topology | None = None,
+    base: CommPlan | None = None,
+    cache: bool = True,
+) -> ScatterPlan:
+    """Cached drop-in for ``CommPlan.transpose()`` (same semantics).
+
+    The entry is keyed on (pattern, partitioning, ``scatter`` marker); on a
+    miss the direction-agnostic base plan is looked up first (and built at
+    most once — a gather and a scatter of the same pattern share it), then
+    the O(m*r) put-direction executor tables are derived and stored as a
+    format-v4 delta referencing the base entry.  A caller that already
+    holds the base plan passes it as ``base`` to skip even the lookup.
+    """
+    shard_size = n // p
+    bs = shard_size if blocksize is None else blocksize
+    topo = topology if topology is not None else Topology(p, p)
+    if not (cache and _enabled()):
+        if base is None:
+            stats.bump("misses")
+            base = build_comm_plan(cols, n, p, blocksize=blocksize,
+                                   topology=topology)
+        stats.bump("derives")
+        return derive_scatter_plan(base)
+
+    key = plan_key(cols, n, p, bs, topo, scatter=True)
+    splan = _memory_get(key)
+    if isinstance(splan, ScatterPlan):
+        stats.bump("memory_hits")
+        return splan
+    splan = _load_disk(key)
+    if splan is not None:
+        stats.bump("disk_hits")
+        _memory_put(key, splan)
+        return splan
+
+    if base is None:
+        base = get_comm_plan(cols, n, p, blocksize=blocksize,
+                             topology=topology, cache=cache)
+    stats.bump("derives")
+    splan = derive_scatter_plan(base)
+    _memory_put(key, splan)
+    _store_disk_data(key, _serialize_scatter(
+        splan, base_key=plan_key(cols, n, p, bs, topo)))
+    return splan

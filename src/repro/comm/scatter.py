@@ -1,0 +1,169 @@
+"""IrregularScatter — the push-direction front door to the strategy ladder.
+
+The paper's condensing/consolidation strategies and §5 cost models apply
+symmetrically to puts and gets: the performance formulas hinge only on
+message volumes, not direction.  ``IrregularScatter`` is the put-side dual
+of ``IrregularGather``: accessor row i's slot j *contributes* a value to
+global element ``pattern.indices[i, j]`` of a sharded vector, duplicate
+targets combine under a ``reduce`` semantic, and every ladder rung (or
+``"auto"`` via the put-direction §5 models) moves exactly the same per-pair
+message sets as the gather of the same pattern — the plan is literally the
+gather plan with send/recv tables swapped (``CommPlan.transpose()``,
+persisted as a format-v4 plan-cache delta).
+
+Reduce semantics (all deterministic, see ``strategies.SCATTER_REDUCES``):
+
+* ``"add"`` — y[t] = sum of contributions (0 where none); the MoE
+  expert→token combine and the SpMV-transpose accumulate.
+* ``"max"`` — y[t] = max of contributions (0 where none).
+* ``"set"`` — y[t] = the last contribution in row-major accessor order
+  (0 where none), via the plan's precomputed winner mask.
+
+Composition mirrors the gather exactly:
+
+* standalone: ``y = scatter(vals)`` with ``vals`` the (m, r, feat...)
+  contribution table sharded over accessor rows; returns the combined
+  length-n vector sharded over owners.
+* fused: thread ``scatter.plan_args`` through your own ``shard_map`` and
+  call ``scatter.local(vals_local, *plan_args_l)`` inside — or use the
+  handle protocol to hide the exchange behind local compute::
+
+      def step_local(vals_local, *plan_args_l):
+          handle = scatter.start_local(vals_local, *plan_args_l)  # issued
+          extra = ...            # anything that doesn't need the landed msgs
+          y_local = handle.finish()   # own-accumulate + landed foreign
+          return y_local + extra
+
+  ``finish`` runs the own-shard accumulate first — it has no data
+  dependency on the collective, so XLA's latency-hiding scheduler overlaps
+  it (that is the ``overlap`` rung's whole trick; as a pure scatter it is
+  identical to ``condensed``).
+
+See docs/comm_api.md for a runnable walkthrough and docs/perf_model.md for
+the put-direction pricing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.comm import plan_cache
+from repro.comm import strategies as strat
+from repro.comm.exchange import IrregularExchange
+from repro.comm.plan import CommPlan, ScatterPlan
+
+__all__ = ["IrregularScatter", "ScatterHandle"]
+
+
+@dataclasses.dataclass
+class ScatterHandle:
+    """An in-flight scatter: the packed contributions are on the wire, the
+    owned slice is not yet combined.  ``finish()`` returns the device's
+    combined ``y_local`` (shard_size, feat...)."""
+
+    vals_local: jax.Array
+    _finish: Callable[[], jax.Array]
+
+    def finish(self) -> jax.Array:
+        return self._finish()
+
+
+class IrregularScatter(IrregularExchange):
+    """Plan + strategy + device state for scattering contributions to one
+    ``AccessPattern``'s targets over one mesh axis (or tuple of axes).
+
+    The pattern plays the transposed role: its (m, r) indices are *write*
+    targets.  Accessor rows and vector elements are partitioned contiguously
+    over the same shards, exactly as for the gather — so a gather and a
+    scatter of the same pattern share one cached base plan.
+    """
+
+    direction = "put"
+
+    def __init__(self, pattern, where, *, reduce: str = "add", **kwargs):
+        """``reduce`` picks the duplicate-combining semantic (``"add"`` /
+        ``"set"`` / ``"max"``).  Remaining keyword arguments (``axis_name``,
+        ``strategy``, ``blocksize``, ``shards_per_node``, ``topology``,
+        ``hw``, ``candidates``, ``use_plan_cache``) are the shared
+        ``IrregularExchange`` surface."""
+        if reduce not in strat.SCATTER_REDUCES:
+            raise ValueError(
+                f"reduce must be one of {strat.SCATTER_REDUCES}")
+        self.reduce = reduce
+        super().__init__(pattern, where, **kwargs)
+
+    def _prepare(self, base_plan: CommPlan) -> None:
+        # the transpose-derived executor tables are strategy-independent,
+        # so they are resolved (and cached as a v4 delta) before the §5
+        # ranking, whose put-direction counts they carry
+        self.splan: ScatterPlan = plan_cache.get_scatter_plan(
+            self.pattern.indices, base_plan.n, base_plan.p,
+            blocksize=base_plan.blocksize, topology=base_plan.topology,
+            base=base_plan, cache=self._use_plan_cache,
+        )
+
+    def _ranking_plan(self, base_plan: CommPlan):
+        return self.splan
+
+    def _bind(self, base_plan: CommPlan, strategy: str) -> None:
+        mesh, axis_name = self.mesh, self.axis_name
+        self.plan = base_plan  # the shared (direction-agnostic) base plan
+        splan = self.splan
+
+        shard = NamedSharding(mesh, P(axis_name))
+        self.in_specs = strat.scatter_in_specs(strategy, axis_name)
+        self.plan_args = tuple(
+            jax.device_put(a, shard)
+            for a in strat.scatter_plan_device_args(splan, strategy)
+        )
+        self._start, self._finish = strat.make_scatter_start_local(
+            splan, strategy, axis_name, self.reduce)
+
+        self._scatter_all = jax.jit(compat.shard_map(
+            self.local,
+            mesh=mesh,
+            in_specs=(P(axis_name),) + self.in_specs,
+            out_specs=P(axis_name),
+            check_vma=False,
+        ))
+
+    @property
+    def counts(self):
+        """Put-direction per-shard volume counts (§5 put-model inputs)."""
+        return self.splan.counts
+
+    # ---- shard_map-local surface (compose inside a consumer's step) ----
+    def local(self, vals_local: jax.Array, *plan_args) -> jax.Array:
+        """One-shot local scatter: contributions (rows, r, feat...) ->
+        combined owned slice (shard_size, feat...)."""
+        in_flight = self._start(vals_local, *plan_args)
+        return self._finish(in_flight, vals_local, *plan_args)
+
+    def start_local(self, vals_local: jax.Array,
+                    *plan_args) -> ScatterHandle:
+        """Pack + issue the exchange; compute while it flies.  The
+        own-shard accumulate runs inside ``finish`` and has no dependency
+        on the collective, so the scheduler hides the exchange behind it
+        (plus anything the consumer schedules in between)."""
+        in_flight = self._start(vals_local, *plan_args)
+
+        def finish():
+            return self._finish(in_flight, vals_local, *plan_args)
+
+        return ScatterHandle(vals_local=vals_local, _finish=finish)
+
+    # ---- standalone surface ----
+    def shard_values(self, vals) -> jax.Array:
+        """Place a host (m, r, feat...) contribution table on the mesh,
+        sharded over accessor rows like the plan expects (the scatter-
+        flavored name for the inherited contiguous placement)."""
+        return self.shard_vector(vals)
+
+    def __call__(self, vals: jax.Array) -> jax.Array:
+        """Combined length-n vector (plus feature dims), sharded over the
+        owning devices: y[t] = reduce of all contributions targeting t."""
+        return self._scatter_all(vals, *self.plan_args)

@@ -34,13 +34,18 @@ def _perfmodel():
     return perfmodel
 
 
-def workload_from_plan(plan: CommPlan, r_nz: int, *,
+def workload_from_plan(plan, r_nz: int, *,
                        materialize: str | None = None,
                        dest_slots: int | None = None):
     """Build the §5 workload record for one plan.
 
-    ``materialize`` selects the unpack pricing: ``None`` keeps the paper's
-    in-place unpack (eq. 15 as written), ``"full"`` adds the O(n)
+    ``plan`` may be a gather ``CommPlan`` or a put-direction
+    ``ScatterPlan`` (``CommPlan.transpose()``): both expose the same
+    partitioning facts, and a scatter plan's ``counts`` already carry the
+    send/recv-swapped volumes the put models price.
+
+    ``materialize`` selects the gather unpack pricing: ``None`` keeps the
+    paper's in-place unpack (eq. 15 as written), ``"full"`` adds the O(n)
     x_copy-assembly tax our functional XLA unpack pays, ``"dest"`` prices
     the consumer-targeted O(slots + recv) unpack instead.  ``dest_slots``
     defaults to the plan's ``dest_len`` (the flattened ``Destination``
@@ -56,32 +61,43 @@ def workload_from_plan(plan: CommPlan, r_nz: int, *,
 
 
 def rank_strategies(
-    plan: CommPlan,
+    plan,
     r_nz: int,
     hw,
     *,
     candidates=None,
     materialize: str | None = None,
     dest_slots: int | None = None,
+    direction: str = "get",
 ) -> list[tuple[str, float]]:
     """[(strategy, predicted_seconds)] sorted fastest-first (§5 formulas).
 
-    ``materialize`` / ``dest_slots`` thread the unpack-mode pricing through
-    (see ``workload_from_plan``) so a consumer with a ``Destination``
-    descriptor ranks rungs by the targeted-unpack cost it will actually pay.
+    ``direction`` selects the model family: ``"get"`` prices the gather
+    rungs (``perfmodel.STRATEGY_PREDICTORS``); ``"put"`` prices the push
+    rungs (``perfmodel.PUT_STRATEGY_PREDICTORS`` — the same formulas with
+    send/recv volumes swapped plus the accumulate-unpack term) and expects
+    ``plan`` to be a ``ScatterPlan`` so the counts are already transposed.
+
+    ``materialize`` / ``dest_slots`` thread the gather unpack-mode pricing
+    through (see ``workload_from_plan``) so a consumer with a
+    ``Destination`` descriptor ranks rungs by the targeted-unpack cost it
+    will actually pay.
     """
     pm = _perfmodel()
+    if direction not in ("get", "put"):
+        raise ValueError(f"direction must be 'get' or 'put', got {direction!r}")
     w = workload_from_plan(plan, r_nz, materialize=materialize,
                            dest_slots=dest_slots)
-    names = tuple(candidates) if candidates else tuple(pm.STRATEGY_PREDICTORS)
-    ranked = [(name, float(pm.STRATEGY_PREDICTORS[name](w, hw)))
-              for name in names]
+    predictors = (pm.PUT_STRATEGY_PREDICTORS if direction == "put"
+                  else pm.STRATEGY_PREDICTORS)
+    names = tuple(candidates) if candidates else tuple(predictors)
+    ranked = [(name, float(predictors[name](w, hw))) for name in names]
     ranked.sort(key=lambda kv: kv[1])
     return ranked
 
 
 def choose_strategy(
-    plan: CommPlan,
+    plan,
     r_nz: int,
     *,
     hw=None,
@@ -90,14 +106,15 @@ def choose_strategy(
     candidates=None,
     materialize: str | None = None,
     dest_slots: int | None = None,
+    direction: str = "get",
 ) -> str:
     """Predicted-fastest strategy for this plan on this hardware."""
     if hw is None:
         from repro.core import tune
         hw = tune.measure_hardware(mesh, axis_name)
     return rank_strategies(plan, r_nz, hw, candidates=candidates,
-                           materialize=materialize,
-                           dest_slots=dest_slots)[0][0]
+                           materialize=materialize, dest_slots=dest_slots,
+                           direction=direction)[0][0]
 
 
 def blocksize_candidates(shard_size: int, *, min_bs: int = 8) -> list[int]:

@@ -45,10 +45,11 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.comm.plan import CommPlan
+from repro.comm.plan import CommPlan, ScatterPlan
 
 __all__ = [
     "STRATEGIES",
+    "SCATTER_REDUCES",
     "replicate_gather_local",
     "blockwise_gather_local",
     "condensed_gather_local",
@@ -57,6 +58,12 @@ __all__ = [
     "gather_in_specs",
     "make_gather_local",
     "make_start_local",
+    "replicate_scatter_local",
+    "blockwise_scatter_local",
+    "condensed_scatter_local",
+    "scatter_plan_device_args",
+    "scatter_in_specs",
+    "make_scatter_start_local",
 ]
 
 
@@ -371,3 +378,308 @@ def make_start_local(plan: CommPlan, strategy: str, axis_name):
 
 
 STRATEGIES = ("replicate", "blockwise", "condensed", "overlap")
+
+# --------------------------------------------------------------------------
+# Push direction (put / scatter): the same rung ladder, roles swapped.
+#
+# Each scatter strategy turns a sharded table of *contributions* ``vals``
+# ((rows_per_shard, r) per device, optional trailing feature dims; slot
+# (i, j) contributes to global element ``tgt_global[i, j]``) into each
+# device's combined owned slice ``y_local`` (shard_size, ...).  Duplicate
+# targets combine under ``reduce``:
+#
+#   * "add" — y[t] = sum of contributions (0 where none);
+#   * "max" — y[t] = max of contributions (0 where none; the -inf identity
+#     is masked out by the plan's static ``touched`` table);
+#   * "set" — y[t] = the last contribution in row-major accessor order
+#     (0 where none).  Implemented as "add" with the plan's precomputed
+#     winner mask zeroing every non-winning slot, so it is deterministic
+#     and rides the identical collective on every rung.
+#
+# The pack side combines duplicates *before* the wire (sender-side
+# condensing); padded message lanes carry the reduce identity, so the
+# receiver's accumulate treats them as no-ops without any masking.
+# --------------------------------------------------------------------------
+
+SCATTER_REDUCES = ("add", "set", "max")
+
+
+def _reduce_identity(dtype, reduce: str):
+    if reduce == "max":
+        if jnp.issubdtype(dtype, jnp.floating):
+            return jnp.array(-jnp.inf, dtype)
+        return jnp.array(jnp.iinfo(dtype).min, dtype)
+    return jnp.array(0, dtype)
+
+
+def _accumulate(acc: jax.Array, idx: jax.Array, vals: jax.Array,
+                reduce: str) -> jax.Array:
+    """Combine ``vals`` into ``acc`` at ``idx`` under the reduce semantic."""
+    if reduce == "max":
+        return acc.at[idx].max(vals)
+    return acc.at[idx].add(vals)
+
+
+def _apply_set_mask(vals: jax.Array, win_mask: jax.Array,
+                    reduce: str) -> jax.Array:
+    if reduce != "set":
+        return vals
+    feat = vals.shape[2:]
+    return vals * win_mask.reshape(win_mask.shape + (1,) * len(feat)).astype(
+        vals.dtype)
+
+
+def _mask_untouched(y: jax.Array, touched: jax.Array,
+                    reduce: str) -> jax.Array:
+    """reduce="max" leaves the -inf identity on never-written elements;
+    the static touched table replaces it with the documented 0."""
+    if reduce != "max":
+        return y
+    feat = y.shape[1:]
+    return jnp.where(
+        touched.reshape(touched.shape + (1,) * len(feat)) > 0, y,
+        jnp.zeros((), y.dtype))
+
+
+def replicate_scatter_local(
+    vals: jax.Array,       # (rows, r, ...) contributions
+    tgt: jax.Array,        # (rows, r) global targets
+    win_mask: jax.Array,   # (rows, r) int8
+    touched: jax.Array,    # (1, shard_size) int8
+    *,
+    axis_name,
+    n: int,
+    shard_size: int,
+    reduce: str,
+) -> jax.Array:
+    """Naive put: every device combines ALL its contributions into a private
+    full-length accumulator, then a whole-vector cross-device reduction
+    (psum / pmax) delivers each owner its slice — the push dual of the
+    replicate all-gather, O(n) volume per device."""
+    feat = vals.shape[2:]
+    vals = _apply_set_mask(vals, win_mask, reduce)
+    acc = jnp.full((n,) + feat, _reduce_identity(vals.dtype, reduce),
+                   vals.dtype)
+    acc = _accumulate(acc, tgt.ravel(), vals.reshape((-1,) + feat), reduce)
+    if reduce == "max":
+        y_full = jax.lax.pmax(acc, axis_name)
+    else:
+        y_full = jax.lax.psum(acc, axis_name)
+    me = _my_shard(axis_name)
+    y = jax.lax.dynamic_slice_in_dim(y_full, me * shard_size, shard_size, 0)
+    return _mask_untouched(y, touched[0], reduce)
+
+
+def condensed_scatter_start_local(
+    vals: jax.Array,
+    cond_msg_idx: jax.Array,   # (rows, r) flat pos in (P*s_max); own -> dump
+    win_mask: jax.Array,
+    *,
+    axis_name,
+    p: int,
+    s_max: int,
+    reduce: str,
+) -> jax.Array:
+    """UPCv3 put: sender-side segment-combine into one padded message per
+    (sender, receiver) pair, then the consolidated exchange (the transpose
+    of the gather's pack + ``upc_memput``).  Returns the landed (P, s_max,
+    ...) contribution buffer, not yet accumulated."""
+    feat = vals.shape[2:]
+    vals = _apply_set_mask(vals, win_mask, reduce)
+    buf = jnp.full((p * s_max + 1,) + feat,
+                   _reduce_identity(vals.dtype, reduce), vals.dtype)
+    buf = _accumulate(buf, cond_msg_idx.ravel(),
+                      vals.reshape((-1,) + feat), reduce)
+    return jax.lax.all_to_all(
+        buf[:p * s_max].reshape((p, s_max) + feat), axis_name,
+        split_axis=0, concat_axis=0, tiled=True)
+
+
+def condensed_scatter_finish_local(
+    recv: jax.Array,
+    vals: jax.Array,
+    unpack_idx: jax.Array,   # (1, P, s_max) = base send_local_idx, swapped
+    own_idx: jax.Array,      # (rows, r) local target; foreign -> shard_size
+    win_mask: jax.Array,
+    touched: jax.Array,
+    *,
+    shard_size: int,
+    reduce: str,
+) -> jax.Array:
+    """Accumulate-unpack: landed foreign contributions combine into the
+    owned slice at the gather's pack positions (send/recv tables swap
+    roles); own contributions combine directly, never touching the wire.
+    Padded lanes carry the reduce identity, so no masking is needed."""
+    feat = vals.shape[2:]
+    vals = _apply_set_mask(vals, win_mask, reduce)
+    acc = jnp.full((shard_size + 1,) + feat,
+                   _reduce_identity(vals.dtype, reduce), vals.dtype)
+    acc = _accumulate(acc, own_idx.ravel(), vals.reshape((-1,) + feat),
+                      reduce)
+    acc = _accumulate(acc, unpack_idx[0].ravel(),
+                      recv.reshape((-1,) + feat), reduce)
+    return _mask_untouched(acc[:shard_size], touched[0], reduce)
+
+
+def condensed_scatter_local(vals, cond_msg_idx, unpack_idx, own_idx,
+                            win_mask, touched, *, axis_name, p, s_max,
+                            shard_size, reduce):
+    recv = condensed_scatter_start_local(
+        vals, cond_msg_idx, win_mask, axis_name=axis_name, p=p, s_max=s_max,
+        reduce=reduce)
+    return condensed_scatter_finish_local(
+        recv, vals, unpack_idx, own_idx, win_mask, touched,
+        shard_size=shard_size, reduce=reduce)
+
+
+def blockwise_scatter_start_local(
+    vals: jax.Array,
+    blk_msg_idx: jax.Array,   # (rows, r) flat pos in (P*b_max*BS)
+    win_mask: jax.Array,
+    *,
+    axis_name,
+    p: int,
+    b_max: int,
+    blocksize: int,
+    reduce: str,
+) -> jax.Array:
+    """UPCv2 put: contributions combine into whole virtual blocks (only
+    blocks containing >= 1 target travel); one padded block all_to_all.
+    Returns the landed (P, b_max, BS, ...) blocks."""
+    feat = vals.shape[2:]
+    vals = _apply_set_mask(vals, win_mask, reduce)
+    buf = jnp.full((p * b_max * blocksize + 1,) + feat,
+                   _reduce_identity(vals.dtype, reduce), vals.dtype)
+    buf = _accumulate(buf, blk_msg_idx.ravel(),
+                      vals.reshape((-1,) + feat), reduce)
+    return jax.lax.all_to_all(
+        buf[:p * b_max * blocksize].reshape((p, b_max * blocksize) + feat),
+        axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+
+def blockwise_scatter_finish_local(
+    recv: jax.Array,
+    vals: jax.Array,
+    unpack_blk: jax.Array,   # (1, P, b_max) = base send_local_blk, swapped
+    own_idx: jax.Array,
+    win_mask: jax.Array,
+    touched: jax.Array,
+    *,
+    shard_size: int,
+    blocksize: int,
+    reduce: str,
+) -> jax.Array:
+    feat = vals.shape[2:]
+    vals = _apply_set_mask(vals, win_mask, reduce)
+    ident = _reduce_identity(vals.dtype, reduce)
+    blocks_per_shard = shard_size // blocksize
+    accb = jnp.full((blocks_per_shard + 1, blocksize) + feat, ident,
+                    vals.dtype)
+    accb = _accumulate(accb, unpack_blk[0].ravel(),
+                       recv.reshape((-1, blocksize) + feat), reduce)
+    y_blocks = accb[:blocks_per_shard].reshape((shard_size,) + feat)
+    acc = jnp.full((shard_size + 1,) + feat, ident, vals.dtype)
+    acc = _accumulate(acc, own_idx.ravel(), vals.reshape((-1,) + feat),
+                      reduce)
+    y_own = acc[:shard_size]
+    y = jnp.maximum(y_blocks, y_own) if reduce == "max" else y_blocks + y_own
+    return _mask_untouched(y, touched[0], reduce)
+
+
+def blockwise_scatter_local(vals, blk_msg_idx, unpack_blk, own_idx,
+                            win_mask, touched, *, axis_name, p, b_max,
+                            shard_size, blocksize, reduce):
+    recv = blockwise_scatter_start_local(
+        vals, blk_msg_idx, win_mask, axis_name=axis_name, p=p, b_max=b_max,
+        blocksize=blocksize, reduce=reduce)
+    return blockwise_scatter_finish_local(
+        recv, vals, unpack_blk, own_idx, win_mask, touched,
+        shard_size=shard_size, blocksize=blocksize, reduce=reduce)
+
+
+def scatter_plan_device_args(splan: ScatterPlan, strategy: str):
+    """Host plan arrays each scatter strategy needs, passed through
+    shard_map with ``scatter_in_specs`` (all sharded on dim 0).
+
+    The condensed/overlap and blockwise rungs reuse the *base gather
+    plan's* pack tables (``send_local_idx`` / ``send_local_blk``) as their
+    accumulate-unpack tables — the send/recv role swap made concrete.
+    """
+    if strategy == "replicate":
+        return (splan.tgt_global, splan.win_mask, splan.touched)
+    if strategy in ("condensed", "overlap"):
+        return (splan.cond_msg_idx, splan.base.send_local_idx,
+                splan.own_tgt_idx, splan.win_mask, splan.touched)
+    if strategy == "blockwise":
+        return (splan.blk_msg_idx, splan.base.send_local_blk,
+                splan.own_tgt_idx, splan.win_mask, splan.touched)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def scatter_in_specs(strategy: str, axis_name):
+    """PartitionSpecs matching ``scatter_plan_device_args``."""
+    p = jax.sharding.PartitionSpec
+    nargs = 3 if strategy == "replicate" else 5
+    return (p(axis_name),) * nargs
+
+
+def make_scatter_start_local(splan: ScatterPlan, strategy: str, axis_name,
+                             reduce: str):
+    """Returns (start_fn, finish_fn) splitting the scatter at its collective.
+
+    ``start_fn(vals_local, *plan_args) -> in_flight`` packs (sender-side
+    combine) and issues the exchange; ``finish_fn(in_flight, vals_local,
+    *plan_args) -> y_local`` runs the own-accumulate — which depends only on
+    local contributions, so XLA's latency-hiding scheduler overlaps it (and
+    anything else scheduled in between) with the in-flight collective — and
+    then combines the landed foreign contributions.  The ``overlap`` rung is
+    the ``condensed`` exchange consumed through this split.
+    """
+    if reduce not in SCATTER_REDUCES:
+        raise ValueError(f"reduce must be one of {SCATTER_REDUCES}")
+    shard_size = splan.shard_size
+    if strategy == "replicate":
+        def start(vals, tgt, win, touched):
+            feat = vals.shape[2:]
+            v = _apply_set_mask(vals, win, reduce)
+            acc = jnp.full((splan.n,) + feat,
+                           _reduce_identity(v.dtype, reduce), v.dtype)
+            acc = _accumulate(acc, tgt.ravel(), v.reshape((-1,) + feat),
+                              reduce)
+            if reduce == "max":
+                return jax.lax.pmax(acc, axis_name)
+            return jax.lax.psum(acc, axis_name)
+
+        def finish(y_full, vals, tgt, win, touched):
+            me = _my_shard(axis_name)
+            y = jax.lax.dynamic_slice_in_dim(
+                y_full, me * shard_size, shard_size, 0)
+            return _mask_untouched(y, touched[0], reduce)
+
+        return start, finish
+    if strategy in ("condensed", "overlap"):
+        def start(vals, msg_idx, unpack_idx, own_idx, win, touched):
+            return condensed_scatter_start_local(
+                vals, msg_idx, win, axis_name=axis_name, p=splan.p,
+                s_max=splan.s_max, reduce=reduce)
+
+        def finish(recv, vals, msg_idx, unpack_idx, own_idx, win, touched):
+            return condensed_scatter_finish_local(
+                recv, vals, unpack_idx, own_idx, win, touched,
+                shard_size=shard_size, reduce=reduce)
+
+        return start, finish
+    if strategy == "blockwise":
+        def start(vals, msg_idx, unpack_blk, own_idx, win, touched):
+            return blockwise_scatter_start_local(
+                vals, msg_idx, win, axis_name=axis_name, p=splan.p,
+                b_max=splan.b_max, blocksize=splan.blocksize, reduce=reduce)
+
+        def finish(recv, vals, msg_idx, unpack_blk, own_idx, win, touched):
+            return blockwise_scatter_finish_local(
+                recv, vals, unpack_blk, own_idx, win, touched,
+                shard_size=shard_size, blocksize=splan.blocksize,
+                reduce=reduce)
+
+        return start, finish
+    raise ValueError(f"unknown strategy {strategy!r}")

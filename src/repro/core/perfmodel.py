@@ -26,6 +26,9 @@ __all__ = [
     "HardwareParams", "ABEL", "TPU_V5E", "SpmvWorkload",
     "predict_v1", "predict_v2", "predict_v3", "predict_replicate",
     "predict_overlap", "predict_all", "STRATEGY_PREDICTORS",
+    "put_components", "predict_put_v2", "predict_put_v3",
+    "predict_put_overlap", "predict_put_replicate", "predict_put_all",
+    "PUT_STRATEGY_PREDICTORS",
     "predict_heat2d", "Heat2DWorkload", "full_assembly_tax",
 ]
 
@@ -298,6 +301,153 @@ STRATEGY_PREDICTORS = {
     "blockwise": predict_v2,
     "condensed": predict_v3,
     "overlap": predict_overlap,
+}
+
+
+# --------------------------------------------------------------------------
+# Put direction (scatter / push) — the §5 formulas with send and recv
+# volumes swapped, plus the accumulate-unpack term (docs/perf_model.md,
+# eqs. 12ᵀ–15ᵀ).  The workload's ``counts`` must already be put-direction
+# counts (``ScatterPlan.counts`` / ``plan.transpose_counts``): per-shard
+# ``s_*_out`` is the contribution volume *leaving* the accessor shard —
+# which equals the gather direction's incoming volume for the same pattern.
+# The models hinge only on volumes, so the structure of eqs. 12–15 carries
+# over; what changes is where the scatter/gather-grain memory traffic lands:
+# the pack side becomes a segment-combine (every contribution read once and
+# folded into the per-pair message buffer) and the unpack side becomes a
+# read-modify-write accumulate into the owned slice (one cacheline-grain
+# access per landed element, like eq. 15's non-contiguous reads).
+# --------------------------------------------------------------------------
+
+def put_components(w: SpmvWorkload, hw: HardwareParams) -> dict[str, np.ndarray]:
+    """Per-thread pack/init/accumulate terms for the condensed put.
+
+    * ``pack`` (12ᵀ): read all ``rows_per_shard * r_nz`` contributions once
+      and segment-combine them into the per-pair message buffer (one write
+      + one re-read per unique outgoing element).
+    * ``init`` (14ᵀ): zero-fill + final write of the owned accumulator —
+      the put dual of the eq.-14 own-shard copy.
+    * ``accumulate`` (15ᵀ): landed foreign contributions (volume
+      ``s_in``) and own contributions each pay one cacheline-grain
+      read-modify-write into the owned slice, plus the index read.
+    """
+    c = w.counts
+    s_out = c.s_local_out + c.s_remote_out
+    s_in = c.s_local_in + c.s_remote_in
+    contribs = float(w.rows_per_shard * w.r_nz)
+    t_pack = (contribs * (hw.elem + hw.idx)
+              + s_out * 2.0 * hw.elem) / hw.w_private               # (12ᵀ)
+    t_init = np.full(
+        w.p, 2.0 * w.shard_size * hw.elem / hw.w_private)           # (14ᵀ)
+    foreign = (c.c_local_indv + c.c_remote_indv).astype(np.float64)
+    own_occ = np.maximum(contribs - foreign, 0.0)
+    t_acc = (s_in * (hw.elem + hw.idx + hw.cacheline)
+             + own_occ * (hw.elem + hw.cacheline)) / hw.w_private   # (15ᵀ)
+    return {"pack": t_pack, "init": t_init, "accumulate": t_acc,
+            "own_occ": own_occ}
+
+
+def predict_put_v3(w: SpmvWorkload, hw: HardwareParams) -> float:
+    """Condensed put (UPCv3ᵀ): segment-combine pack, one consolidated
+    message per pair (eq. 13 on the swapped volumes), accumulate-unpack."""
+    c = w.counts
+    comp = t_comp_per_thread(w, hw)
+    parts = put_components(w, hw)
+
+    comm = -np.inf
+    for node in range(w.topology.num_nodes):
+        th = _threads_of_node(w.topology, node)
+        t_local = np.max(2.0 * c.s_local_out[th] * hw.elem / hw.w_private)
+        t_remote = np.sum(
+            c.c_remote_out[th] * hw.tau
+            + c.s_remote_out[th] * hw.elem / hw.w_remote
+        )
+        comm = max(comm, np.max(parts["pack"][th]) + t_local + t_remote)
+
+    tail = np.max(parts["init"] + parts["accumulate"] + comp)
+    return float(comm + tail)
+
+
+def predict_put_overlap(w: SpmvWorkload, hw: HardwareParams) -> float:
+    """Condensed put with the own-accumulate (and the producing compute)
+    hiding the exchange: the memput phase max-composes with the own-shard
+    work instead of adding to it; the tail is the foreign accumulate only."""
+    c = w.counts
+    comp = t_comp_per_thread(w, hw)
+    parts = put_components(w, hw)
+    s_in = c.s_local_in + c.s_remote_in
+    t_own = (parts["own_occ"] * (hw.elem + hw.cacheline) / hw.w_private
+             + comp)
+
+    comm = -np.inf
+    for node in range(w.topology.num_nodes):
+        th = _threads_of_node(w.topology, node)
+        t_local = np.max(2.0 * c.s_local_out[th] * hw.elem / hw.w_private)
+        t_remote = np.sum(
+            c.c_remote_out[th] * hw.tau
+            + c.s_remote_out[th] * hw.elem / hw.w_remote
+        )
+        t_memput = np.max(parts["pack"][th]) + t_local + t_remote
+        comm = max(comm, max(t_memput, float(np.max(t_own[th]))))
+
+    t_foreign = s_in * (hw.elem + hw.idx + hw.cacheline) / hw.w_private
+    tail = np.max(parts["init"] + t_foreign)
+    return float(comm + tail)
+
+
+def predict_put_v2(w: SpmvWorkload, hw: HardwareParams) -> float:
+    """Blockwise put (UPCv2ᵀ): contributions combine into whole virtual
+    blocks (one scatter-grain write each), only touched blocks travel
+    (eq. 11 on the swapped block counts), landed blocks accumulate into
+    the owned slice at block granularity."""
+    c = w.counts
+    bs_bytes = w.blocksize * hw.elem
+    contribs = float(w.rows_per_shard * w.r_nz)
+    t_pack = np.full(
+        w.p, contribs * (hw.elem + hw.cacheline) / hw.w_private)
+    t_comp = t_comp_per_thread(w, hw)
+    total = -np.inf
+    for node in range(w.topology.num_nodes):
+        th = _threads_of_node(w.topology, node)
+        t_local = np.max(c.b_local[th] * 2.0 * bs_bytes / hw.w_private)
+        t_remote = np.sum(c.b_remote[th] * (hw.tau + bs_bytes / hw.w_remote))
+        total = max(total,
+                    np.max(t_comp[th] + t_pack[th]) + t_local + t_remote)
+    # accumulate tail: every landed block position read-modify-written
+    t_acc = np.max((c.b_local + c.b_remote) * w.blocksize
+                   * 2.0 * hw.elem / hw.w_private)
+    return float(total + t_acc)
+
+
+def predict_put_replicate(w: SpmvWorkload, hw: HardwareParams) -> float:
+    """Naive put: every device combines all its contributions into a
+    private full-length vector, then a whole-vector all-reduce (double the
+    replicate all-gather's volume: reduce-scatter + all-gather)."""
+    topo = w.topology
+    per_node_shards = topo.shards_per_node
+    contribs = float(w.rows_per_shard * w.r_nz)
+    t_acc = (contribs * (hw.elem + hw.cacheline)
+             + 2.0 * w.n * hw.elem) / hw.w_private
+    local_vol = (per_node_shards - 1) * w.shard_size * hw.elem
+    remote_vol = (w.n - per_node_shards * w.shard_size) * hw.elem
+    t_comm = 2.0 * (
+        2.0 * local_vol / hw.w_private
+        + (hw.tau * max(0, topo.num_nodes - 1) + remote_vol / hw.w_remote)
+    )
+    return float(np.max(t_comp_per_thread(w, hw)) + t_acc + t_comm)
+
+
+def predict_put_all(w: SpmvWorkload, hw: HardwareParams) -> dict[str, float]:
+    return {name: float(fn(w, hw))
+            for name, fn in PUT_STRATEGY_PREDICTORS.items()}
+
+
+# runtime strategy name (strategies.STRATEGIES) -> §5 put-direction predictor
+PUT_STRATEGY_PREDICTORS = {
+    "replicate": predict_put_replicate,
+    "blockwise": predict_put_v2,
+    "condensed": predict_put_v3,
+    "overlap": predict_put_overlap,
 }
 
 

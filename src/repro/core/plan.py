@@ -1,13 +1,18 @@
 """Deprecation shim — the planner moved to ``repro.comm.plan``.
 
 The communication planning machinery is workload-agnostic and now lives in
-the ``repro.comm`` package (``AccessPattern`` / ``IrregularGather`` front
-door).  This module re-exports the old names so existing imports keep
-working; new code should import from ``repro.comm``.
+the ``repro.comm`` package (``AccessPattern`` / ``IrregularGather`` /
+``IrregularScatter`` front doors).  This module re-exports the old names —
+plus the direction-agnostic additions (``ScatterPlan``,
+``CommPlan.transpose()`` helpers) — so existing imports keep working; new
+code should import from ``repro.comm``.
 """
 from repro.comm.plan import (  # noqa: F401
-    CommPlan, GatherCounts, Topology, build_comm_plan,
-    blockwise_block_counts,
+    CommPlan, GatherCounts, ScatterPlan, Topology, build_comm_plan,
+    blockwise_block_counts, derive_scatter_plan, pattern_cols,
+    transpose_counts,
 )
 
-__all__ = ["Topology", "GatherCounts", "CommPlan", "build_comm_plan"]
+__all__ = ["Topology", "GatherCounts", "CommPlan", "ScatterPlan",
+           "build_comm_plan", "derive_scatter_plan", "pattern_cols",
+           "transpose_counts"]

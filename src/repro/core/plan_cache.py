@@ -2,12 +2,16 @@
 
 Re-exported module-level state (``stats``, the memory LRU, env knobs) is the
 same object as ``repro.comm.plan_cache``'s, so existing monitoring keeps
-seeing every hit/miss.  New code should import from ``repro.comm``.
+seeing every hit/miss — including the v4 scatter-delta derivations
+(``get_scatter_plan`` / ``stats.derives``).  New code should import from
+``repro.comm``.
 """
 from repro.comm.plan_cache import (  # noqa: F401
     CacheStats, StalePlanCacheError, cache_dir, clear_memory_cache,
-    get_comm_plan, plan_key, stats, _disk_path, _key_for_version, _memory,
+    get_comm_plan, get_scatter_plan, plan_key, stats, _disk_path,
+    _key_for_version, _memory,
 )
 
-__all__ = ["plan_key", "get_comm_plan", "clear_memory_cache", "stats",
-           "CacheStats", "StalePlanCacheError", "cache_dir"]
+__all__ = ["plan_key", "get_comm_plan", "get_scatter_plan",
+           "clear_memory_cache", "stats", "CacheStats",
+           "StalePlanCacheError", "cache_dir"]

@@ -49,6 +49,7 @@ from repro import compat
 from repro.comm.gather import IrregularGather
 from repro.comm.pattern import AccessPattern, Destination
 from repro.comm.plan import CommPlan, Topology
+from repro.comm.scatter import IrregularScatter
 from repro.core.matrix import EllpackMatrix
 
 __all__ = ["DistributedSpMV"]
@@ -64,7 +65,14 @@ def _spmv_local(x_copy, diag_l, vals_l, cols_l, *, shard_size, axis_name):
 
 
 class DistributedSpMV:
-    """y = (D + A) x with x, y, D, A, J sharded over ``axis_name``."""
+    """y = (D + A) x with x, y, D, A, J sharded over ``axis_name``.
+
+    ``transpose=True`` computes y = (D + A)ᵀ x instead — the push-direction
+    workload: row i's off-diagonal entries become *contributions*
+    ``vals[i, j] * x[i]`` to ``y[cols[i, j]]``, scatter-accumulated through
+    ``IrregularScatter`` (``reduce="add"``) over the transpose-derived plan,
+    so forward and transposed products share one cached base ``CommPlan``.
+    """
 
     def __init__(
         self,
@@ -77,6 +85,7 @@ class DistributedSpMV:
         shards_per_node: int | None = None,
         use_kernel: bool = False,
         materialize: str | None = None,
+        transpose: bool = False,
         hw=None,
         use_plan_cache: bool = True,
     ):
@@ -88,6 +97,21 @@ class DistributedSpMV:
         n = matrix.n
         assert n % p == 0, "pad the matrix so n divides the mesh axis"
         topology = Topology(p, shards_per_node or p)
+        self.transpose = transpose
+        if transpose:
+            if use_kernel:
+                raise NotImplementedError(
+                    "transpose=True runs the scatter-accumulate path; the "
+                    "split Pallas kernels consume the gather-direction "
+                    "x_copy and are not wired to it yet")
+            assert materialize is None, (
+                "materialize= is a gather-unpack knob; the transposed "
+                "product always accumulates straight into the owned slice")
+            self._init_transpose(matrix, mesh, axis_name=axis_name,
+                                 strategy=strategy, blocksize=blocksize,
+                                 topology=topology, hw=hw,
+                                 use_plan_cache=use_plan_cache)
+            return
 
         if materialize is None:
             materialize = "full" if use_kernel else "dest"
@@ -294,8 +318,63 @@ class DistributedSpMV:
 
         self._step = step
 
+    def _init_transpose(self, matrix, mesh, *, axis_name, strategy,
+                        blocksize, topology, hw, use_plan_cache):
+        """y = (D + A)ᵀ x via scatter-accumulate of partial products.
+
+        Each shard forms its contributions ``vals * x_local[:, None]`` (its
+        rows' partial products) and pushes them to the column owners; the
+        diagonal term is purely local (Dᵀ = D).  The ``ScatterHandle``
+        protocol issues the exchange first, so the diagonal product and the
+        own-column accumulate run while the collective is in flight — the
+        ``overlap`` rung's window, available on every rung.
+        """
+        scatter = IrregularScatter(
+            AccessPattern.from_ellpack(matrix), mesh,
+            axis_name=axis_name, strategy=strategy, blocksize=blocksize,
+            topology=topology, reduce="add", hw=hw,
+            use_plan_cache=use_plan_cache,
+        )
+        self.scatter = scatter
+        self.gather = None
+        self.plan: CommPlan = scatter.plan
+        self.splan = scatter.splan
+        self.requested_strategy = strategy
+        self.predicted_times = scatter.predicted_times
+        self.strategy = scatter.strategy
+        self.blocksize = self.plan.blocksize
+        self.materialize = None
+
+        shard = NamedSharding(mesh, P(axis_name))
+        shard2 = NamedSharding(mesh, P(axis_name, None))
+        self._diag = jax.device_put(matrix.diag, shard)
+        self._vals = jax.device_put(matrix.vals, shard2)
+        self._cols = None
+        self._plan_args = scatter.plan_args
+
+        def step_local(x_local, diag_l, vals_l, *plan_args):
+            contrib = vals_l * x_local[:, None]
+            handle = scatter.start_local(contrib, *plan_args)
+            y_diag = diag_l * x_local
+            return y_diag + handle.finish()
+
+        mapped = compat.shard_map(
+            step_local, mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name), P(axis_name, None))
+            + scatter.in_specs,
+            out_specs=P(axis_name), check_vma=False,
+        )
+
+        @jax.jit
+        def step(x):
+            return mapped(x, self._diag, self._vals, *self._plan_args)
+
+        self._step = step
+
     # ---- public API ----
     def shard_vector(self, x: np.ndarray) -> jax.Array:
+        if self.transpose:
+            return self.scatter.shard_vector(x)
         return self.gather.shard_vector(x)
 
     def __call__(self, x: jax.Array) -> jax.Array:
@@ -303,10 +382,15 @@ class DistributedSpMV:
 
     def gather_x_copy(self, x: jax.Array) -> jax.Array:
         """(P, >=n) array: row q is device q's private x_copy (testing)."""
+        assert not self.transpose, "the transposed product never gathers"
         return self.gather(x)
 
     @property
     def counts(self):
+        """Exact per-shard §5 volume counts — put-direction counts when
+        ``transpose=True`` (the direction the step actually runs)."""
+        if self.transpose:
+            return self.splan.counts
         return self.plan.counts
 
     def iterate(self, x: jax.Array, steps: int) -> jax.Array:

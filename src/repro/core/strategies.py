@@ -1,24 +1,39 @@
 """Deprecation shim — the strategy ladder moved to ``repro.comm.strategies``.
 
-New code should go through ``repro.comm.IrregularGather`` instead of calling
-the local gather functions directly.
+New code should go through ``repro.comm.IrregularGather`` /
+``repro.comm.IrregularScatter`` instead of calling the local gather/scatter
+functions directly.
 """
 from repro.comm.strategies import (  # noqa: F401
     STRATEGIES,
+    SCATTER_REDUCES,
     replicate_gather_local,
     blockwise_gather_local,
     condensed_gather_local,
+    replicate_scatter_local,
+    blockwise_scatter_local,
+    condensed_scatter_local,
     plan_device_args,
     gather_in_specs,
     make_gather_local,
     make_start_local,
+    scatter_plan_device_args,
+    scatter_in_specs,
+    make_scatter_start_local,
 )
 
 __all__ = [
     "STRATEGIES",
+    "SCATTER_REDUCES",
     "replicate_gather_local",
     "blockwise_gather_local",
     "condensed_gather_local",
+    "replicate_scatter_local",
+    "blockwise_scatter_local",
+    "condensed_scatter_local",
     "plan_device_args",
     "gather_in_specs",
+    "scatter_plan_device_args",
+    "scatter_in_specs",
+    "make_scatter_start_local",
 ]

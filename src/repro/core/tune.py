@@ -11,7 +11,11 @@ The *selection* half of the autotuner (ranking strategies and sweeping
 BLOCKSIZE through the §5 formulas) moved to ``repro.comm.select`` with the
 rest of the communication machinery; ``rank_strategies`` /
 ``choose_strategy`` / ``choose_blocksize`` / ``workload_from_plan`` are
-re-exported here for compatibility.
+re-exported here for compatibility (``rank_strategies`` /
+``choose_strategy`` now take ``direction="get"|"put"`` to price the push
+rungs of ``IrregularScatter``).  The per-(mesh, axis) calibration memo used
+by the exchange front doors — ``measure_hw`` / ``clear_hw_memo`` — lives in
+``repro.comm.exchange`` and is re-exported here too.
 """
 from __future__ import annotations
 
@@ -19,6 +23,9 @@ import time
 
 import numpy as np
 
+from repro.comm.exchange import (  # noqa: F401  (compat re-exports)
+    clear_hw_memo, measure_hw,
+)
 from repro.comm.select import (  # noqa: F401  (compat re-exports)
     choose_blocksize, choose_strategy, rank_strategies, workload_from_plan,
 )
@@ -27,6 +34,7 @@ from repro.core.perfmodel import HardwareParams
 __all__ = [
     "measure_hardware", "rank_strategies", "choose_strategy",
     "choose_blocksize", "clear_hardware_cache", "workload_from_plan",
+    "measure_hw", "clear_hw_memo",
 ]
 
 _hw_cache: dict[tuple, HardwareParams] = {}

@@ -29,7 +29,8 @@ import numpy as np
 from repro.models.layers import init_linear
 
 __all__ = ["init_moe", "moe_fwd", "moe_capacity",
-           "moe_dispatch_pattern", "moe_dispatch_ref", "MoEDispatchGather"]
+           "moe_dispatch_pattern", "moe_dispatch_ref", "MoEDispatchGather",
+           "moe_combine_weights", "moe_combine_ref", "MoECombineScatter"]
 
 
 def init_moe(key, cfg, dtype=jnp.float32):
@@ -144,8 +145,25 @@ def moe_fwd(p, x, cfg, *, constrain=None, aux=None):
 # ``CommPlan`` / strategy ladder / §5 models as SpMV and Heat2D.
 
 
+def _pack_slots(top_e, num_tokens: int, num_experts: int, capacity: int):
+    """Shared slot packing: sort (token, choice) pairs by expert, truncate
+    at capacity.  Returns (slot_expert, slot_pos, src_flat, keep) over the
+    flattened (num_tokens * k) routing choices, token-major within each
+    expert — the same tokens ``moe_fwd`` keeps."""
+    top_e = np.asarray(top_e)
+    k = top_e.shape[1]
+    e_flat = top_e.ravel()
+    order = np.argsort(e_flat, kind="stable")     # (e, then token-major)
+    se = e_flat[order]
+    counts = np.bincount(e_flat, minlength=num_experts)
+    seg_start = np.cumsum(counts) - counts
+    pos = np.arange(num_tokens * k) - seg_start[se]
+    keep = pos < capacity
+    return se, pos, order, keep
+
+
 def moe_dispatch_pattern(top_e, num_tokens: int, num_experts: int,
-                         capacity: int, p: int):
+                         capacity: int, p: int, *, packed=None):
     """Token→expert assignment as an access-pattern index table.
 
     ``top_e``: (num_tokens, k) expert choices per token.  Accessor row
@@ -153,19 +171,16 @@ def moe_dispatch_pattern(top_e, num_tokens: int, num_experts: int,
     order, truncated at capacity — the same tokens ``moe_fwd`` keeps).
     Returns ``(idx (E*C,) int32, valid (E*C,) bool)``; empty slots pad with
     a token *owned by the expert's shard* so padding costs no communication.
+    ``packed`` accepts a precomputed ``_pack_slots`` result so a caller
+    that also builds the combine weights runs the sort pipeline once.
     """
     top_e = np.asarray(top_e)
     assert num_tokens % p == 0 and num_experts % p == 0
     t_loc, e_loc = num_tokens // p, num_experts // p
     k = top_e.shape[1]
-    e_flat = top_e.ravel()
-    t_flat = np.repeat(np.arange(num_tokens, dtype=np.int64), k)
-    order = np.argsort(e_flat, kind="stable")     # (e, then token-major)
-    se, st = e_flat[order], t_flat[order]
-    counts = np.bincount(e_flat, minlength=num_experts)
-    seg_start = np.cumsum(counts) - counts
-    pos = np.arange(num_tokens * k) - seg_start[se]
-    keep = pos < capacity
+    se, pos, order, keep = packed if packed is not None else _pack_slots(
+        top_e, num_tokens, num_experts, capacity)
+    st = np.repeat(np.arange(num_tokens, dtype=np.int64), k)[order]
 
     idx = np.zeros((num_experts, capacity), np.int64)
     valid = np.zeros((num_experts, capacity), bool)
@@ -176,6 +191,26 @@ def moe_dispatch_pattern(top_e, num_tokens: int, num_experts: int,
         num_experts, capacity)
     idx = np.where(valid, idx, own_token)
     return idx.reshape(-1).astype(np.int32), valid.reshape(-1)
+
+
+def moe_combine_weights(top_e, top_w, num_tokens: int, num_experts: int,
+                        capacity: int, *, packed=None):
+    """Per-slot combine weight for the expert→token return path.
+
+    ``top_w``: (num_tokens, k) routing weights aligned with ``top_e``.
+    Slot ``e*capacity + c`` gets the weight of the token occupying it under
+    ``moe_dispatch_pattern``'s packing; empty (over-capacity) slots get 0,
+    so their contribution vanishes exactly.  Returns (E*C,) float32.
+    ``packed`` accepts a precomputed ``_pack_slots`` result, as in
+    ``moe_dispatch_pattern``.
+    """
+    top_w = np.asarray(top_w)
+    se, pos, order, keep = packed if packed is not None else _pack_slots(
+        top_e, num_tokens, num_experts, capacity)
+    sw = top_w.ravel()[order]
+    w = np.zeros((num_experts, capacity), np.float32)
+    w[se[keep], pos[keep]] = sw[keep]
+    return w.reshape(-1)
 
 
 def moe_dispatch_ref(x, idx, valid, num_experts: int, capacity: int):
@@ -307,3 +342,106 @@ class MoEDispatchGather:
         """x: (num_tokens, ...) sharded -> (num_experts, capacity, ...)
         expert input buffers, sharded over the expert dim."""
         return self._dispatch(x)
+
+
+def moe_combine_ref(buf, idx, valid, w_slot, num_tokens: int):
+    """NumPy ground truth for the combine: y[t] = Σ_slots→t w_slot * buf.
+
+    ``buf``: (num_experts, capacity, ...) expert outputs; ``idx``/``valid``
+    from ``moe_dispatch_pattern``; ``w_slot`` from ``moe_combine_weights``.
+    """
+    buf = np.asarray(buf)
+    feat = buf.shape[2:]
+    flat = buf.reshape((-1,) + feat)
+    wshape = (-1,) + (1,) * len(feat)
+    contrib = flat * (np.asarray(w_slot) * valid).reshape(wshape)
+    y = np.zeros((num_tokens,) + feat, buf.dtype)
+    np.add.at(y, np.asarray(idx), contrib.astype(buf.dtype))
+    return y
+
+
+class MoECombineScatter:
+    """Weighted expert→token combine via ``repro.comm`` — the true inverse
+    of ``MoEDispatchGather``.
+
+    After the experts run, each (expert, capacity-slot) row holds the
+    processed vector of the token that occupied it; the combine pushes
+    ``w_slot * buf[e, c]`` back to that token and sums across a token's
+    experts (``reduce="add"``) — what ``moe_fwd``'s ``combine_one`` vmap
+    does *locally* inside one jitted forward.  On the cross-device serving
+    path (experts sharded over ``axis_name``, tokens sharded over the same
+    axis) this class replaces that local-only combine: the same
+    ``AccessPattern`` that planned the dispatch gather plans the combine
+    scatter — ``CommPlan.transpose()`` reuses the cached base plan, so the
+    pair costs one O(nnz) preparation step total — and any ladder rung (or
+    ``"auto"`` via the §5 put models) moves exactly the selected tokens'
+    vectors back.
+
+    Over-capacity (invalid) slots carry weight 0, so they contribute
+    exactly nothing, matching ``moe_fwd``'s capacity-drop semantics.
+    """
+
+    def __init__(self, top_e, top_w, num_tokens: int, num_experts: int,
+                 capacity: int, mesh, *, axis_name: str = "data",
+                 strategy: str = "auto", blocksize=None,
+                 shards_per_node=None, hw=None, use_plan_cache: bool = True):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.comm.pattern import AccessPattern
+        from repro.comm.plan import Topology
+        from repro.comm.scatter import IrregularScatter
+
+        p = int(mesh.shape[axis_name])
+        self.p = p
+        self.num_tokens = num_tokens
+        self.num_experts = num_experts
+        self.capacity = capacity
+        packed = _pack_slots(top_e, num_tokens, num_experts, capacity)
+        idx, valid = moe_dispatch_pattern(
+            top_e, num_tokens, num_experts, capacity, p, packed=packed)
+        w_slot = moe_combine_weights(
+            top_e, top_w, num_tokens, num_experts, capacity, packed=packed)
+        self.idx, self.valid, self.w_slot = idx, valid, w_slot
+        # same pattern as the dispatch gather: slot (e, c) touches its
+        # token — pulled on dispatch, pushed on combine
+        pattern = AccessPattern.from_indices(idx, n=num_tokens)
+        self.scatter = IrregularScatter(
+            pattern, mesh, axis_name=axis_name, strategy=strategy,
+            blocksize=blocksize, reduce="add",
+            topology=Topology(p, shards_per_node or p), hw=hw,
+            use_plan_cache=use_plan_cache,
+        )
+        self.strategy = self.scatter.strategy
+        self.requested_strategy = strategy
+        self.predicted_times = self.scatter.predicted_times
+        self.plan = self.scatter.plan
+        self.splan = self.scatter.splan
+        scatter = self.scatter
+
+        shard = NamedSharding(mesh, P(axis_name))
+        # invalid slots: weight 0 -> contribution exactly 0
+        w_masked = (w_slot * valid).astype(np.float32)[:, None]
+        self._w = jax.device_put(w_masked, shard)
+
+        @jax.jit
+        def combine(buf):
+            flat = buf.reshape((num_experts * capacity, 1) + buf.shape[2:])
+            w = self._w.reshape((num_experts * capacity, 1)
+                                + (1,) * (buf.ndim - 2))
+            return scatter(flat * w.astype(buf.dtype))
+
+        self._combine = combine
+
+    @property
+    def counts(self):
+        """Put-direction §5 volume counts of the combine exchange."""
+        return self.splan.counts
+
+    def shard_expert_buf(self, buf) -> jax.Array:
+        """Place a host (num_experts, capacity, ...) buffer on the mesh,
+        sharded over the expert dim."""
+        return self.scatter.shard_vector(buf)
+
+    def __call__(self, buf: jax.Array) -> jax.Array:
+        """buf: (num_experts, capacity, ...) expert outputs sharded over
+        the expert dim -> (num_tokens, ...) combined tokens, sharded."""
+        return self._combine(buf)

@@ -152,34 +152,35 @@ def test_destination_plans_round_trip_and_reuse_base():
     assert len({k0, k1, k2}) == 3
 
 
-def test_v2_cache_entry_rejected_with_clear_message():
-    """A genuine PR-2 → PR-3 upgrade: the old build keyed its entries with
-    the v2 content prefix, so a v3 lookup must probe that filename too,
-    surface the explicit migration warning, delete the orphan (it would
-    otherwise count against the disk cap forever), and rebuild."""
+@pytest.mark.parametrize("legacy", [2, 3])
+def test_legacy_cache_entry_rejected_with_clear_message(legacy):
+    """A genuine pre-v4 → v4 upgrade: the old build keyed its entries with
+    its own version prefix, so a v4 lookup must probe those filenames too,
+    surface the explicit migration warning, delete the stale-format orphan
+    (it would otherwise count against the disk cap forever), and rebuild."""
     import os
 
     m, n, p, bs, topo = _case()
     plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
-    v3_path = plan_cache._disk_path(plan_cache.plan_key(m.cols, n, p, bs,
+    v4_path = plan_cache._disk_path(plan_cache.plan_key(m.cols, n, p, bs,
                                                         topo))
-    # simulate the pre-upgrade cache: the entry lives under the v2 key
-    v2_path = plan_cache._disk_path(
-        plan_cache._key_for_version(2, m.cols, n, p, bs, topo))
-    os.rename(v3_path, v2_path)
+    # simulate the pre-upgrade cache: the entry lives under the legacy key
+    old_path = plan_cache._disk_path(
+        plan_cache._key_for_version(legacy, m.cols, n, p, bs, topo))
+    os.rename(v4_path, old_path)
 
     plan_cache.clear_memory_cache()
-    with pytest.warns(UserWarning, match="v2.*v3"):
+    with pytest.warns(UserWarning, match=f"v{legacy}.*v4"):
         plan = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs,
                                         topology=topo)
-    assert not os.path.exists(v2_path)   # orphan evicted, not left behind
+    assert not os.path.exists(old_path)  # orphan evicted, not left behind
     assert plan_cache.stats.misses == 2  # stale entry -> rebuild
     fresh = build_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
     _assert_plans_equal(plan, fresh)
 
 
 def test_stale_format_meta_rejected_by_deserialize():
-    """Belt and braces: an entry whose meta says pre-v3 (however it got
+    """Belt and braces: an entry whose meta says pre-v4 (however it got
     under the current key) is refused with the migration message and
     rebuilt — never reinterpreted as a current-format plan."""
     m, n, p, bs, topo = _case()
@@ -188,17 +189,97 @@ def test_stale_format_meta_rejected_by_deserialize():
     with np.load(path) as data:
         entries = {k: data[k] for k in data.files}
     meta = entries["meta"].copy()
-    meta[0] = 2
-    entries["meta"] = meta[:15]  # v2 meta had no dest_len field
+    meta[0] = 3  # a v3-era entry: same field set, older format stamp
+    entries["meta"] = meta
     np.savez_compressed(path, **entries)
 
     plan_cache.clear_memory_cache()
-    with pytest.warns(UserWarning, match="format v2.*v3"):
+    with pytest.warns(UserWarning, match="format v3.*v4"):
         plan = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs,
                                         topology=topo)
     assert plan_cache.stats.misses == 2  # stale entry -> rebuild
     fresh = build_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
     _assert_plans_equal(plan, fresh)
+
+
+def _assert_scatter_plans_equal(a, b):
+    _assert_plans_equal(a.base, b.base)
+    for name in ("tgt_global", "cond_msg_idx", "blk_msg_idx", "own_tgt_idx",
+                 "win_mask", "touched"):
+        np.testing.assert_array_equal(getattr(a, name), getattr(b, name))
+    for cf in dataclasses.fields(a.counts):
+        np.testing.assert_array_equal(getattr(a.counts, cf.name),
+                                      getattr(b.counts, cf.name))
+
+
+def test_scatter_plan_round_trip_and_reuse_base():
+    """v4 scatter entries are O(m*r) deltas referencing the base plan: the
+    gather and the scatter of one pattern share a single O(nnz) build, and
+    the disk round trip reconstructs the transpose bit-identically."""
+    from repro.comm.plan import derive_scatter_plan
+
+    m, n, p, bs, topo = _case()
+    base = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+    s1 = plan_cache.get_scatter_plan(m.cols, n, p, blocksize=bs,
+                                     topology=topo)
+    assert plan_cache.stats.misses == 1 and plan_cache.stats.derives == 1
+    _assert_scatter_plans_equal(s1, derive_scatter_plan(base))
+    # transpose round-trips onto the cached base
+    assert s1.transpose() is s1.base
+    _assert_plans_equal(s1.transpose(), base)
+
+    plan_cache.clear_memory_cache()
+    s2 = plan_cache.get_scatter_plan(m.cols, n, p, blocksize=bs,
+                                     topology=topo)
+    assert plan_cache.stats.disk_hits >= 1
+    assert plan_cache.stats.derives == 1  # no re-derivation
+    _assert_scatter_plans_equal(s1, s2)
+    # scatter and gather keys never collide
+    assert plan_cache.plan_key(m.cols, n, p, bs, topo) != \
+        plan_cache.plan_key(m.cols, n, p, bs, topo, scatter=True)
+
+
+def test_concurrent_writers_no_torn_reads():
+    """The write-to-temp + atomic-rename protocol must keep every reader
+    seeing either a complete entry or a miss — never torn bytes — while
+    several threads build/load the same plans concurrently."""
+    import threading
+
+    m, n, p, bs, topo = _case()
+    fresh = build_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+    fresh_s = fresh.transpose()
+    errors = []
+
+    def worker():
+        try:
+            for _ in range(6):
+                plan = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs,
+                                                topology=topo)
+                _assert_plans_equal(plan, fresh)
+                splan = plan_cache.get_scatter_plan(m.cols, n, p,
+                                                    blocksize=bs,
+                                                    topology=topo)
+                _assert_scatter_plans_equal(splan, fresh_s)
+                plan_cache.clear_memory_cache()  # force the disk tier
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    # the cache directory holds only complete entries (no leftover temps
+    # visible under the entry names) and both load cleanly
+    plan_cache.clear_memory_cache()
+    _assert_plans_equal(
+        plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo),
+        fresh)
+    _assert_scatter_plans_equal(
+        plan_cache.get_scatter_plan(m.cols, n, p, blocksize=bs,
+                                    topology=topo),
+        fresh_s)
 
 
 def test_spmv_auto_dest_attaches_exactly_one_destination():
