@@ -6,7 +6,11 @@ import time
 import jax
 import numpy as np
 
-__all__ = ["timeit", "csv_row", "calibrate_host"]
+__all__ = ["timeit", "csv_row", "drain_rows", "calibrate_host"]
+
+# every csv_row also lands here so the runner can persist a machine-
+# readable copy (BENCH_table3.json) next to the human-readable CSV
+_rows: list[dict] = []
 
 
 def timeit(fn, *args, iters: int = 10, warmup: int = 3) -> float:
@@ -23,6 +27,15 @@ def timeit(fn, *args, iters: int = 10, warmup: int = 3) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    _rows.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                  "derived": derived})
+
+
+def drain_rows() -> list[dict]:
+    """All rows emitted since the last drain (for the JSON artifact)."""
+    rows = list(_rows)
+    _rows.clear()
+    return rows
 
 
 def calibrate_host(elem_bytes: int = 4):

@@ -28,9 +28,21 @@ def _ensure_devices():
                    + sys.argv[1:], env)
 
 
+def _write_bench_json(name: str, rows, smoke: bool) -> None:
+    """Machine-readable per-PR perf trajectory (BENCH_<name>.json at the
+    repo root, next to the CSV the CI job tees) — every csv_row of the
+    bench, schedule + scatter rows included."""
+    import json
+
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump({"bench": name, "smoke": smoke, "rows": rows}, f, indent=1)
+    print(f"# wrote {path} ({len(rows)} rows)")
+
+
 def main() -> None:
     _ensure_devices()
-    from benchmarks import tables
+    from benchmarks import common, tables
 
     smoke = "--smoke" in sys.argv[1:]
     which = [a for a in sys.argv[1:] if not a.startswith("-")]
@@ -47,10 +59,13 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in which:
         fn = all_benches[name]
+        common.drain_rows()
         if smoke and "smoke" in inspect.signature(fn).parameters:
             fn(smoke=True)
         else:
             fn()
+        if name == "table3" and smoke:
+            _write_bench_json(name, common.drain_rows(), smoke)
 
 
 if __name__ == "__main__":

@@ -142,6 +142,7 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50, smoke=False):
                         x_host=x_host, y_ref=y_ref)
     table3_moe_dispatch(smoke=smoke, iters=iters)
     table3_scatter(smoke=smoke, iters=iters)
+    table3_schedule(smoke=smoke, iters=iters)
     return results
 
 
@@ -344,6 +345,115 @@ def table3_scatter(n=1 << 17, r_nz=16, smoke=False, iters=50):
 
 
 # --------------------------------------------------------------------------
+# Table 3e: the fused multi-exchange window — ExchangeSchedule chains vs
+# their back-to-back one-shot baselines, with the §5 composition model
+# (perfmodel.predict_schedule, eq. 23) predicted-vs-measured
+# --------------------------------------------------------------------------
+
+def table3_schedule(smoke=False, iters=50):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import tune
+    from repro.core.matrix import spmv_ref_np, spmv_t_ref_np
+    from repro.core.spmv import normal_equations_step
+    from repro.models.moe import (MoECombineScatter, MoEDispatchGather,
+                                  MoELayer, moe_expert_local)
+
+    mesh = _mesh8()
+    print("# table3 schedule: fused ExchangeSchedule windows vs back-to-back"
+          " one-shot exchanges, predicted (eq. 23) vs measured")
+
+    # -- moe_layer: dispatch → expert MLP → combine in ONE window --
+    n_tok, d = (1 << 12, 8) if smoke else (1 << 14, 32)
+    f, k, e_total = 2 * d, 2, 32
+    cap = int(1.25 * n_tok * k / e_total)
+    rng = np.random.default_rng(7)
+    weights = 1.0 / np.arange(1, e_total + 1)
+    weights /= weights.sum()
+    top_e = rng.choice(e_total, size=(n_tok, k), p=weights)
+    top_w = rng.random((n_tok, k)).astype(np.float32)
+    x_host = rng.standard_normal((n_tok, d)).astype(np.float32)
+    params = {
+        "w1": (rng.standard_normal((e_total, d, f)) * 0.1).astype(np.float32),
+        "w2": (rng.standard_normal((e_total, f, d)) * 0.1).astype(np.float32),
+    }
+    hw_tok = tune.measure_hardware(mesh, "data").replace(elem=4 * d)
+
+    layer = MoELayer(params, top_e, top_w, n_tok, e_total, cap, mesh,
+                     strategy="condensed", blocksize=n_tok // 8 // 16,
+                     shards_per_node=1, hw=hw_tok)
+    x = layer.shard_tokens(x_host)
+    t_fused = timeit(layer, x, iters=iters)
+    t_pred = layer.predicted_window["total"]
+
+    # back-to-back one-shot baseline: three windows, same rungs, the
+    # identical local expert math (moe_expert_local on both paths)
+    disp = MoEDispatchGather(top_e, n_tok, e_total, cap, mesh,
+                             strategy="condensed",
+                             blocksize=n_tok // 8 // 16,
+                             shards_per_node=1, hw=hw_tok)
+    comb = MoECombineScatter(top_e, top_w, n_tok, e_total, cap, mesh,
+                             strategy="condensed",
+                             blocksize=n_tok // 8 // 16,
+                             shards_per_node=1, hw=hw_tok)
+    shard = NamedSharding(mesh, P("data"))
+    w1 = jax.device_put(params["w1"], shard)
+    w2 = jax.device_put(params["w2"], shard)
+    expert = jax.jit(compat.shard_map(
+        lambda b, a, c: moe_expert_local(b, a, c),
+        mesh=mesh, in_specs=(P("data"),) * 3, out_specs=P("data"),
+        check_vma=False))
+
+    def baseline(xx):
+        return comb(expert(disp(xx), w1, w2))
+
+    np.testing.assert_array_equal(np.asarray(layer(x)),
+                                  np.asarray(baseline(x)))
+    t_base = timeit(baseline, x, iters=iters)
+    acc = min(t_fused, t_pred) / max(t_fused, t_pred)
+    csv_row("table3.schedule.moe_layer.fused", t_fused * 1e6,
+            f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
+            f"vs_baseline={t_fused/t_base:.2f}x "
+            f"setup_saved_us={layer.predicted_window['setup_saved']*1e6:.1f}")
+    csv_row("table3.schedule.moe_layer.baseline", t_base * 1e6,
+            "back_to_back=dispatch+expert+combine (3 windows) "
+            f"predicted_sum_us="
+            f"{layer.predicted_window['sum_standalone']*1e6:.1f}")
+
+    # -- normal_eq: z = MᵀM x (forward gather + transposed scatter) --
+    n, r_nz = (1 << 14, 16) if smoke else (1 << 17, 16)
+    m = make_mesh_like_matrix(n, r_nz, locality_window=n // 64,
+                              long_range_frac=0.02, seed=1)
+    x_host = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    z_ref = spmv_t_ref_np(m, spmv_ref_np(m, x_host))
+    hw = tune.measure_hardware(mesh, "data")
+    step = normal_equations_step(m, mesh, strategy="condensed",
+                                 blocksize=n // 8 // 16, shards_per_node=1,
+                                 hw=hw)
+    x = step.shard_vector(x_host)
+    np.testing.assert_allclose(np.asarray(step(x)), z_ref, rtol=2e-3,
+                               atol=2e-3)
+    t_fused = timeit(step, x, iters=iters)
+    t_pred = step.predicted_window["total"]
+
+    fwd = DistributedSpMV(m, mesh, strategy="condensed",
+                          blocksize=n // 8 // 16, shards_per_node=1, hw=hw)
+    bwd = DistributedSpMV(m, mesh, strategy="condensed",
+                          blocksize=n // 8 // 16, shards_per_node=1,
+                          transpose=True, hw=hw)
+
+    def ne_baseline(xx):
+        return bwd(fwd(xx))
+
+    t_base = timeit(ne_baseline, x, iters=iters)
+    acc = min(t_fused, t_pred) / max(t_fused, t_pred)
+    csv_row("table3.schedule.normal_eq.fused", t_fused * 1e6,
+            f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
+            f"vs_baseline={t_fused/t_base:.2f}x")
+    csv_row("table3.schedule.normal_eq.baseline", t_base * 1e6,
+            "back_to_back=forward+transpose (2 windows)")
+
+
+# --------------------------------------------------------------------------
 # Table 4: measured vs predicted with calibrated host parameters
 # --------------------------------------------------------------------------
 
@@ -446,7 +556,12 @@ def table5_heat2d(big_m=512, big_n=1024, steps=100, smoke=False):
     h = Heat2D(mesh, big_m, big_n, coef=0.1, overlap=True)
     phi = h.init_field(0)
     t = timeit(lambda p: h.run(p, steps), phi, iters=3, warmup=1)
+    # the full-window overlap prediction incl. the edge-ring recompute term
+    # (the refinement strategy="auto" ranks overlap vs condensed with)
+    win = pm.predict_heat2d_window(w, hw, steps=steps)
+    acc = min(t, win["overlap"]) / max(t, win["overlap"])
     csv_row("table5.heat2d_overlap", t * 1e6,
+            f"predicted_us={win['overlap']*1e6:.0f} accuracy={acc:.2f} "
             f"vs_base={t/t_base:.2f}x "
             "(interior/edge split so halo exchange can overlap)")
 

@@ -20,6 +20,15 @@ consumer's named slots — O(slots + recv) work — instead of assembling the
 O(n) full-length private copy (still available via
 ``finish(materialize="full")``).
 
+The third, higher-level front door is the ``Schedule`` builder /
+``ExchangeSchedule``: a declared *chain* of exchanges
+(gather → compute → scatter, any length) compiled into one ``shard_map``
+whose stages share a single exchange-core context (one hw-calibration
+memo hit, one base-plan probe per pattern, transpose-derived scatter
+plans reused from sibling gathers) and pipeline through the handle
+protocol — priced as one consolidated window by
+``perfmodel.predict_schedule``.
+
 Consumers: ``repro.core.spmv`` (the paper's workload, plus its transposed
 product ``transpose=True`` via scatter-accumulate), ``repro.core.heat2d``
 (§8 stencil halos), ``repro.models.moe`` (token→expert dispatch gather and
@@ -37,16 +46,18 @@ from repro.comm.strategies import SCATTER_REDUCES, STRATEGIES
 from repro.comm.exchange import IrregularExchange
 from repro.comm.gather import IrregularGather, OverlapHandle
 from repro.comm.scatter import IrregularScatter, ScatterHandle
+from repro.comm.schedule import ExchangeSchedule, Schedule, StageRef
 from repro.comm import plan, plan_cache, pattern, shared, strategies, select
-from repro.comm import exchange, gather, scatter
+from repro.comm import exchange, gather, scatter, schedule
 
 __all__ = [
     "AccessPattern", "Destination", "SharedVector", "IrregularExchange",
     "IrregularGather", "IrregularScatter", "OverlapHandle", "ScatterHandle",
+    "ExchangeSchedule", "Schedule", "StageRef",
     "CommPlan", "GatherCounts", "ScatterPlan", "Topology",
     "attach_destination", "build_comm_plan", "blockwise_block_counts",
     "derive_scatter_plan", "get_comm_plan", "get_scatter_plan",
     "STRATEGIES", "SCATTER_REDUCES",
     "plan", "plan_cache", "pattern", "shared", "strategies", "select",
-    "exchange", "gather", "scatter",
+    "exchange", "gather", "scatter", "schedule",
 ]

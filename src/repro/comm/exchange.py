@@ -143,6 +143,7 @@ class IrregularExchange:
         hw=None,
         candidates=None,
         use_plan_cache: bool = True,
+        base_plan: CommPlan | None = None,
     ):
         if isinstance(where, SharedVector):
             assert where.n == pattern.n, (where.n, pattern.n)
@@ -165,19 +166,30 @@ class IrregularExchange:
         if topology is None:
             topology = Topology(p, shards_per_node or p)
 
-        if blocksize == "auto":
-            if hw is None:
-                hw = measure_hw(mesh, axis_name)
-            blocksize = select.choose_blocksize(
-                pattern.indices, n, p, topology=topology, hw=hw)
-        # destination-independent base plan first: the strategy resolves
-        # against it, and any direction- or consumer-specific delta (the
-        # scatter executor tables, a Destination descriptor) is attached
-        # only afterwards
-        base_plan: CommPlan = plan_cache.get_comm_plan(
-            pattern.indices, n, p, blocksize=blocksize, topology=topology,
-            cache=use_plan_cache,
-        )
+        if base_plan is not None:
+            # an already-resolved destination-independent base plan (e.g.
+            # one ExchangeSchedule stage sharing it with a sibling stage of
+            # the same pattern): skip the probe and any blocksize sweep
+            assert (base_plan.n == n and base_plan.p == p
+                    and base_plan.m == pattern.m), (
+                "base_plan was built for a different pattern/partitioning: "
+                f"{(base_plan.n, base_plan.p, base_plan.m)} != "
+                f"{(n, p, pattern.m)}")
+            blocksize = base_plan.blocksize
+        else:
+            if blocksize == "auto":
+                if hw is None:
+                    hw = measure_hw(mesh, axis_name)
+                blocksize = select.choose_blocksize(
+                    pattern.indices, n, p, topology=topology, hw=hw)
+            # destination-independent base plan first: the strategy resolves
+            # against it, and any direction- or consumer-specific delta (the
+            # scatter executor tables, a Destination descriptor) is attached
+            # only afterwards
+            base_plan = plan_cache.get_comm_plan(
+                pattern.indices, n, p, blocksize=blocksize, topology=topology,
+                cache=use_plan_cache,
+            )
         self._use_plan_cache = use_plan_cache
         self._prepare(base_plan)
 

@@ -46,8 +46,11 @@ keeps the classic assembled copy on the same gather, bit-identically, and
 
 The shared vector may carry trailing feature dimensions (token embeddings,
 stacked right-hand sides): strategies move whole feature rows and all §5
-volumes scale by the feature width.  See docs/comm_api.md for runnable
-walkthroughs of every surface.
+volumes scale by the feature width.  A chain of exchanges fuses through
+the third front door, ``repro.comm.schedule`` — there a gather is one
+*stage*, constructed against the schedule's shared plan/calibration
+context (a single-stage schedule is bit-identical to this class).  See
+docs/comm_api.md for runnable walkthroughs of every surface.
 """
 from __future__ import annotations
 

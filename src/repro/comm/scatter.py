@@ -40,7 +40,10 @@ Composition mirrors the gather exactly:
   identical to ``condensed``).
 
 See docs/comm_api.md for a runnable walkthrough and docs/perf_model.md for
-the put-direction pricing.
+the put-direction pricing.  In a ``repro.comm.schedule`` chain a scatter
+is one *stage*: it reuses a sibling gather stage's base plan (its executor
+tables are the transpose-derived delta) and its own-shard accumulate runs
+inside the fused window.
 """
 from __future__ import annotations
 

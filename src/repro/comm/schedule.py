@@ -1,0 +1,475 @@
+"""ExchangeSchedule — chains of exchanges fused into one planned window.
+
+The paper optimizes one exchange at a time; real consumers issue *chains*
+of them: MoE dispatch-gather → expert MLP → combine-scatter, SpMV
+``y = A x`` followed by ``z = Aᵀ y``, a halo exchange before every stencil
+step.  Run through the one-shot front doors, each link pays its own plan
+resolution, hardware calibration, ``shard_map`` window and unpack.  A
+``Schedule`` declares the whole chain up front so ``compile`` can resolve
+every stage against **one shared exchange-core context**:
+
+* one hardware-calibration memo hit (``exchange.measure_hw``) prices every
+  ``strategy="auto"`` stage;
+* one plan-cache probe batch — each unique pattern's destination-independent
+  base ``CommPlan`` is resolved once and shared by every stage that uses it;
+* a scatter stage whose pattern matches a sibling gather stage reuses that
+  gather's base plan, so its executor tables are a cheap transpose-derived
+  delta (``CommPlan.transpose()``), never a second O(nnz) build;
+* the §5 composition model (``perfmodel.predict_schedule``) prices the
+  *fused* window — per-stage eq. 12–15 / 12ᵀ–15ᵀ terms with the
+  window-setup latency paid once per consolidated window — so ``"auto"``
+  may pick a different rung per stage while sharing one consolidation
+  point.
+
+``compile`` emits a **single** ``shard_map``.  Inside it the stages
+pipeline through the handle protocol: an exchange stage *issues* its
+collective (``start_local``) when reached, and its landed messages are
+delivered (``finish``) only when a later stage actually consumes them —
+every stage scheduled in between runs inside the collective's window, and
+a scatter's own-shard accumulate overlaps its own exchange by
+construction.  Stage order in the builder is therefore the schedule: put
+the compute that should hide an exchange *after* that exchange stage and
+*before* the stage that reads its result.
+
+``IrregularGather`` / ``IrregularScatter`` stay exactly what they were —
+a schedule stage IS one of them, constructed against the shared context —
+so a single-stage schedule is bit-identical to the one-shot front door
+(shim-tested in ``tests/test_schedule.py``).
+
+>>> import jax, numpy as np
+>>> from repro.comm import AccessPattern, Schedule
+>>> p = len(jax.devices())
+>>> mesh = jax.make_mesh((p,), ("data",))
+>>> n = 16 * p
+>>> rng = np.random.default_rng(0)
+>>> idx = rng.integers(0, n, size=(n, 3)).astype(np.int32)
+>>> pattern = AccessPattern.from_indices(idx, n=n)
+>>> sched = Schedule()
+>>> x = sched.input("x")
+>>> rows = sched.constant(idx)      # (n, 3) index table, row-sharded
+>>> g = sched.gather(pattern, src=x)
+>>> y = sched.compute(lambda xc, r: xc[r].sum(-1), g, rows)
+>>> step = sched.compile(mesh, strategy="condensed", blocksize=8)
+>>> xv = rng.standard_normal(n).astype(np.float32)
+>>> out = np.asarray(step(step.shard_input(xv)))
+>>> bool(np.allclose(out, xv[idx].sum(-1), rtol=1e-5))
+True
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.comm import plan_cache
+from repro.comm import select
+from repro.comm import strategies as strat
+from repro.comm.exchange import measure_hw
+from repro.comm.gather import IrregularGather
+from repro.comm.pattern import AccessPattern
+from repro.comm.plan import CommPlan, Topology
+from repro.comm.scatter import IrregularScatter
+from repro.comm.shared import axis_size
+
+__all__ = ["Schedule", "ExchangeSchedule", "StageRef"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageRef:
+    """Symbolic handle to one stage's output inside a ``Schedule``."""
+
+    sid: int
+    kind: str
+    name: str
+    owner: int = 0      # id() of the owning Schedule — refs don't cross
+
+
+class _Stage:
+    """Builder-side record of one stage (mutable until compile)."""
+
+    def __init__(self, sid: int, kind: str, name: str, owner: int, **kw):
+        self.sid = sid
+        self.kind = kind
+        self.name = name
+        self.owner = owner
+        self.__dict__.update(kw)
+
+    @property
+    def ref(self) -> StageRef:
+        return StageRef(self.sid, self.kind, self.name, self.owner)
+
+
+class Schedule:
+    """Declarative builder for an ``ExchangeSchedule``.
+
+    Build stages in execution order (the order IS the pipeline schedule),
+    then ``compile(mesh, strategy="auto")``::
+
+        sched = Schedule()
+        h = sched.gather(pattern, destination=dest)
+        y = sched.compute(expert_fn, h, weights)
+        sched.scatter(pattern, y, reduce="add")
+        step = sched.compile(mesh, strategy="auto")
+
+    ``resolve`` may be called explicitly before the compute stages are
+    added when a later stage's shape depends on the resolved rung (e.g.
+    Heat2D only adds its interior stage when ``"auto"`` picks ``overlap``).
+    """
+
+    def __init__(self):
+        self._stages: list[_Stage] = []
+        self._ctx: dict | None = None       # set by resolve()
+        self._exchanges: dict[int, Any] = {}
+        self._compiled = False
+
+    # ---- builder surface ----
+    def _add(self, kind: str, name: str | None, **kw) -> StageRef:
+        assert not self._compiled, "schedule already compiled"
+        sid = len(self._stages)
+        name = name or f"{kind}{sid}"
+        if any(s.name == name for s in self._stages):
+            raise ValueError(
+                f"duplicate stage name {name!r} — names key the "
+                ".strategies/.predicted_times reporting, so each stage "
+                "needs its own")
+        st = _Stage(sid, kind, name, id(self), **kw)
+        self._stages.append(st)
+        return st.ref
+
+    def _check_ref(self, ref, *, array_valued: bool = False) -> StageRef:
+        assert isinstance(ref, StageRef), (
+            f"stage arguments must be StageRefs, got {type(ref).__name__}")
+        if ref.owner != id(self):
+            raise ValueError(
+                f"stage ref {ref.name!r} belongs to a different Schedule "
+                "— refs cannot cross builders")
+        assert 0 <= ref.sid < len(self._stages), ref
+        st = self._stages[ref.sid]
+        if array_valued and st.kind == "gather" and st.destination is not None:
+            raise ValueError(
+                f"stage {st.name!r} delivers named Destination slots (a "
+                "dict); wrap it in a compute stage that selects/combines "
+                "the slots before feeding an exchange")
+        return ref
+
+    def input(self, name: str | None = None, *, spec=None) -> StageRef:
+        """Declare an external operand of the compiled step (call-time
+        positional argument, in declaration order).  ``spec`` is its
+        ``PartitionSpec`` (default: sharded over the comm axis)."""
+        return self._add("input", name, spec=spec)
+
+    def constant(self, value, name: str | None = None, *, spec=None,
+                 replicated: bool = False) -> StageRef:
+        """Bind a fixed array operand (matrix values, expert weights,
+        combine weights).  It is ``device_put`` once at compile time and
+        rides the single ``shard_map`` with ``spec`` (default: dim 0
+        sharded over the comm axis; ``replicated=True`` for ``P()``)."""
+        if replicated:
+            assert spec is None, "pass spec OR replicated, not both"
+            spec = P()
+        return self._add("constant", name, value=value, spec=spec)
+
+    def gather(self, pattern: AccessPattern, *, src: StageRef | None = None,
+               destination=None, dest_slots: int | None = None,
+               strategy: str | None = None, blocksize=None,
+               finish_kwargs: dict | None = None,
+               name: str | None = None) -> StageRef:
+        """Pull stage: deliver ``pattern``'s elements of the ``src`` value
+        (default: the first declared input, auto-declared if absent).
+
+        The stage value is the strategy's default materialization: the
+        ``{name: slots}`` dict with a ``destination``, else the full
+        ``x_copy``.  ``strategy`` / ``blocksize`` override the schedule
+        defaults per stage; ``finish_kwargs`` are forwarded to
+        ``OverlapHandle.finish`` (``extra_slots=`` / ``copy_own=``)."""
+        if src is None:
+            src = next((s.ref for s in self._stages if s.kind == "input"),
+                       None)
+            if src is None:
+                src = self.input()
+        self._check_ref(src, array_valued=True)
+        return self._add("gather", name, pattern=pattern, src=src,
+                         destination=destination, dest_slots=dest_slots,
+                         strategy=strategy, blocksize=blocksize,
+                         finish_kwargs=dict(finish_kwargs or {}))
+
+    def compute(self, fn: Callable, *args: StageRef,
+                name: str | None = None) -> StageRef:
+        """Local compute stage: ``fn(*values)`` runs per device inside the
+        fused ``shard_map``, where each value is the referenced stage's
+        device-local output.  A compute stage placed after an exchange
+        stage but before anything consumes that exchange runs inside its
+        collective window."""
+        for a in args:
+            self._check_ref(a)
+        return self._add("compute", name, fn=fn, args=tuple(args))
+
+    def scatter(self, pattern: AccessPattern, src: StageRef, *,
+                reduce: str = "add", strategy: str | None = None,
+                blocksize=None, name: str | None = None) -> StageRef:
+        """Push stage: ``src``'s value is the (rows_local, r, feat...)
+        contribution table; the stage value is the combined owned slice.
+        A pattern already gathered by a sibling stage reuses its base plan
+        (the scatter tables are a transpose-derived delta)."""
+        self._check_ref(src, array_valued=True)
+        if reduce not in strat.SCATTER_REDUCES:
+            raise ValueError(f"reduce must be one of {strat.SCATTER_REDUCES}")
+        return self._add("scatter", name, pattern=pattern, src=src,
+                         reduce=reduce, strategy=strategy,
+                         blocksize=blocksize)
+
+    # ---- resolution (shared exchange-core context) ----
+    def _exchange_stages(self) -> list[_Stage]:
+        return [s for s in self._stages if s.kind in ("gather", "scatter")]
+
+    def resolve(self, mesh, *, axis_name="data", strategy: str = "auto",
+                blocksize=None, topology: Topology | None = None,
+                shards_per_node: int | None = None, hw=None,
+                use_plan_cache: bool = True) -> "Schedule":
+        """Resolve every exchange stage against one shared context: one
+        ``measure_hw`` memo hit, one base-plan probe per unique pattern,
+        transpose-derived scatter plans reused from sibling gathers.
+
+        Idempotent prerequisite of ``compile``; call it explicitly when a
+        later stage's shape depends on a resolved rung
+        (``strategy_of(ref)``)."""
+        assert self._ctx is None, "schedule already resolved"
+        exchanges = self._exchange_stages()
+        assert exchanges, "a schedule needs at least one exchange stage"
+        p = axis_size(mesh, axis_name)
+        if topology is None:
+            topology = Topology(p, shards_per_node or p)
+
+        needs_hw = any((s.strategy or strategy) == "auto"
+                       or (s.blocksize if s.blocksize is not None
+                           else blocksize) == "auto"
+                       for s in exchanges)
+        if needs_hw and hw is None:
+            hw = measure_hw(mesh, axis_name)   # ONE memo hit for all stages
+
+        # one plan-cache probe per unique (pattern, blocksize): every stage
+        # over the same index set shares one base CommPlan object, so a
+        # scatter stage derives its executor tables from the sibling
+        # gather's plan instead of rebuilding
+        base_plans: dict[str, CommPlan] = {}
+        for st in exchanges:
+            bs = st.blocksize if st.blocksize is not None else blocksize
+            if bs == "auto":
+                bs = select.choose_blocksize(
+                    st.pattern.indices, st.pattern.n, p, topology=topology,
+                    hw=hw)
+            shard_size = st.pattern.n // p
+            bs_key = shard_size if bs is None else bs
+            key = plan_cache.plan_key(st.pattern.indices, st.pattern.n, p,
+                                      bs_key, topology)
+            if key not in base_plans:
+                base_plans[key] = plan_cache.get_comm_plan(
+                    st.pattern.indices, st.pattern.n, p, blocksize=bs,
+                    topology=topology, cache=use_plan_cache)
+            st_strategy = st.strategy if st.strategy is not None else strategy
+            kwargs = dict(axis_name=axis_name, strategy=st_strategy,
+                          topology=topology, hw=hw,
+                          use_plan_cache=use_plan_cache,
+                          base_plan=base_plans[key])
+            if st.kind == "gather":
+                ex = IrregularGather(
+                    st.pattern, mesh, destination=st.destination,
+                    dest_slots=st.dest_slots, **kwargs)
+            else:
+                ex = IrregularScatter(st.pattern, mesh, reduce=st.reduce,
+                                      **kwargs)
+            self._exchanges[st.sid] = ex
+
+        self._ctx = dict(mesh=mesh, axis_name=axis_name, topology=topology,
+                         hw=hw, default_strategy=strategy)
+        return self
+
+    def exchange_of(self, ref: StageRef):
+        """The resolved ``IrregularGather``/``IrregularScatter`` behind one
+        exchange stage (available after ``resolve``)."""
+        assert self._ctx is not None, "call resolve()/compile() first"
+        return self._exchanges[ref.sid]
+
+    def strategy_of(self, ref: StageRef) -> str:
+        """The resolved rung of one exchange stage."""
+        return self.exchange_of(ref).strategy
+
+    def _predict_window(self):
+        """§5 fused-window composition for the resolved rungs (None when
+        no hardware parameters are in scope)."""
+        hw = self._ctx["hw"]
+        if hw is None:
+            return None
+        from repro.core import perfmodel as pm
+        specs = []
+        for st in self._exchange_stages():
+            ex = self._exchanges[st.sid]
+            if st.kind == "gather":
+                materialize = "dest" if ex.destination is not None else None
+                dest_slots = (ex.destination.num_slots
+                              if ex.destination is not None else None)
+                w = select.workload_from_plan(
+                    ex.plan, st.pattern.r, materialize=materialize,
+                    dest_slots=dest_slots)
+                specs.append((st.name, "get", w, ex.strategy))
+            else:
+                w = select.workload_from_plan(ex.splan, st.pattern.r)
+                specs.append((st.name, "put", w, ex.strategy))
+        return pm.predict_schedule(specs, hw)
+
+    # ---- compilation (the single shard_map) ----
+    def compile(self, mesh=None, *, output: StageRef | None = None,
+                out_spec=None, **resolve_kw) -> "ExchangeSchedule":
+        """Finalize into an ``ExchangeSchedule``: one ``shard_map`` whose
+        stages pipeline through the handle protocol.
+
+        ``output`` picks the stage whose value the step returns (default:
+        the last stage; must be array-valued); ``out_spec`` its
+        ``PartitionSpec`` (default: sharded over the comm axis).  ``mesh``
+        and the remaining keywords are forwarded to ``resolve`` unless it
+        already ran."""
+        assert not self._compiled, "schedule already compiled"
+        if self._ctx is None:
+            assert mesh is not None, "compile() needs a mesh (or resolve())"
+            self.resolve(mesh, **resolve_kw)
+        else:
+            assert mesh is None or mesh is self._ctx["mesh"], (
+                "schedule was resolved on a different mesh")
+            if resolve_kw:
+                raise ValueError(
+                    "schedule already resolved — these compile() keywords "
+                    f"would be silently ignored: {sorted(resolve_kw)}; "
+                    "pass them to resolve() instead")
+        if output is None:
+            output = self._stages[-1].ref
+        self._check_ref(output, array_valued=True)
+        self._compiled = True
+        return ExchangeSchedule(self, output, out_spec)
+
+
+class ExchangeSchedule:
+    """A compiled multi-exchange step: one ``shard_map``, one fused window.
+
+    * ``step(*inputs)`` — jitted end-to-end call (inputs in declaration
+      order, placed like ``shard_input`` expects);
+    * ``.mapped`` / ``.step_args`` / ``.in_specs`` — the raw
+      ``shard_map``-ed local function and its bound operands, for
+      consumers that embed the step in their own ``jit``/``scan``;
+    * ``.strategies`` — resolved rung per exchange stage;
+    * ``.predicted_times`` — per-stage §5 rung rankings (auto stages);
+    * ``.predicted_window`` — the fused-window composition prediction
+      (``perfmodel.predict_schedule``), with per-stage terms and the
+      consolidation saving; ``None`` when no hardware parameters were in
+      scope (every stage on a fixed rung and no ``hw=`` passed).
+    """
+
+    def __init__(self, sched: Schedule, output: StageRef, out_spec):
+        ctx = sched._ctx
+        mesh, axis_name = ctx["mesh"], ctx["axis_name"]
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.topology = ctx["topology"]
+        self.hw = ctx["hw"]
+        self._stages = sched._stages
+        self._exchanges = sched._exchanges
+        self._output = output
+        stages = self._stages
+
+        self.strategies = {st.name: self._exchanges[st.sid].strategy
+                           for st in stages
+                           if st.kind in ("gather", "scatter")}
+        self.predicted_times = {
+            st.name: self._exchanges[st.sid].predicted_times
+            for st in stages if st.kind in ("gather", "scatter")}
+        self.predicted_window = sched._predict_window()
+
+        # operand layout: all inputs first (call order), then per-stage
+        # bound operands (constants + plan arrays) in stage order
+        self._input_sids = [st.sid for st in stages if st.kind == "input"]
+        self._input_specs = tuple(
+            st.spec if st.spec is not None else P(axis_name)
+            for st in stages if st.kind == "input")
+        shard = NamedSharding(mesh, P(axis_name))
+        step_args: list = []
+        bound_specs: list = []
+        slots: dict[int, slice] = {}     # sid -> slice into bound args
+        for st in stages:
+            lo = len(step_args)
+            if st.kind == "constant":
+                spec = st.spec if st.spec is not None else P(axis_name)
+                step_args.append(jax.device_put(
+                    np.asarray(st.value), NamedSharding(mesh, spec)))
+                bound_specs.append(spec)
+                st.value = None   # free the host copy; only the device
+                # array (in step_args) is ever read again
+            elif st.kind in ("gather", "scatter"):
+                ex = self._exchanges[st.sid]
+                step_args.extend(ex.plan_args)
+                bound_specs.extend(ex.in_specs)
+            slots[st.sid] = slice(lo, len(step_args))
+        self.step_args = tuple(step_args)
+        self.in_specs = self._input_specs + tuple(bound_specs)
+        n_inputs = len(self._input_sids)
+        exchanges = self._exchanges
+
+        def step_local(*args):
+            inputs, bound = args[:n_inputs], args[n_inputs:]
+            env: dict[int, Any] = {}
+            pending: dict[int, Callable[[], Any]] = {}
+
+            def force(sid):
+                if sid in pending:
+                    env[sid] = pending.pop(sid)()
+                return env[sid]
+
+            for st in stages:
+                if st.kind == "input":
+                    env[st.sid] = inputs[self._input_sids.index(st.sid)]
+                elif st.kind == "constant":
+                    (env[st.sid],) = bound[slots[st.sid]]
+                elif st.kind == "compute":
+                    vals = [force(a.sid) for a in st.args]
+                    env[st.sid] = st.fn(*vals)
+                else:
+                    # exchange stage: ISSUE the collective now; deliver
+                    # (finish) lazily when a later stage consumes it —
+                    # everything in between runs inside its window
+                    ex = exchanges[st.sid]
+                    src = force(st.src.sid)
+                    handle = ex.start_local(src, *bound[slots[st.sid]])
+                    if st.kind == "gather" and st.finish_kwargs:
+                        kw = st.finish_kwargs
+                        pending[st.sid] = lambda h=handle, kw=kw: h.finish(
+                            **kw)
+                    else:
+                        pending[st.sid] = handle.finish
+            return force(output.sid)
+
+        self.mapped = compat.shard_map(
+            step_local, mesh=mesh, in_specs=self.in_specs,
+            out_specs=out_spec if out_spec is not None else P(axis_name),
+            check_vma=False,
+        )
+        step_args_t = self.step_args
+
+        @jax.jit
+        def step(*inputs):
+            return self.mapped(*inputs, *step_args_t)
+
+        self._step = step
+
+    def shard_input(self, value, which: int = 0) -> jax.Array:
+        """Place a host value on the mesh with input ``which``'s spec."""
+        spec = self._input_specs[which]
+        return jax.device_put(value, NamedSharding(self.mesh, spec))
+
+    # kept as the SpMV-flavored alias every front door exposes
+    def shard_vector(self, value) -> jax.Array:
+        return self.shard_input(value, 0)
+
+    def __call__(self, *inputs) -> jax.Array:
+        return self._step(*inputs)

@@ -7,12 +7,17 @@ applies the 5-point Jacobi update.
 
 The halo exchange is now a consumer of ``repro.comm``: the stencil
 neighborhood is an ``AccessPattern`` (``AccessPattern.from_stencil5``) over
-the tile-major flattening of the field, and ``IrregularGather`` — planned
-over the *product* of the two mesh axes — delivers each device's private
-copy.  The condensed plan works out to exactly the four halo strips (the
-paper's ``halo_exchange_intrinsic``), but the full ladder now applies:
-``strategy=`` accepts any rung or ``"auto"``, priced by the same §5 models
-as every other consumer.
+the tile-major flattening of the field, and the per-step exchange+stencil
+is compiled through a ``repro.comm.schedule.Schedule`` — a gather stage
+planned over the *product* of the two mesh axes, an interior compute stage
+scheduled inside its collective window (when the split runs), and the
+halo-consuming update stage, all in one ``shard_map``.  The condensed plan
+works out to exactly the four halo strips (the paper's
+``halo_exchange_intrinsic``), but the full ladder applies: ``strategy=``
+accepts any rung or ``"auto"`` — ranked on the FULL per-step window cost
+(``perfmodel.predict_heat2d_window``: eqs. 19–22 plus the edge-ring
+recompute term of the overlap split) for the overlap/condensed pair, by
+the generic §5 exchange models for the rest.
 
 Devices at the grid boundary read guaranteed-zero slots, which is harmless:
 the update is masked to the global interior, reproducing the paper's
@@ -42,8 +47,6 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import compat
-from repro.comm.gather import IrregularGather
 from repro.comm.pattern import AccessPattern, Destination
 from repro.comm.plan import Topology
 
@@ -114,6 +117,7 @@ class Heat2D:
         comm_axes = (row_axis, col_axis)
         p = mprocs * nprocs
         n = big_m * big_n
+        topo = Topology(p, shards_per_node or p)
         pattern = AccessPattern.from_stencil5(big_m, big_n, mprocs, nprocs)
         destination = None
         if materialize == "dest":
@@ -123,56 +127,104 @@ class Heat2D:
                 big_m, big_n, mprocs, nprocs, zero_slot=Destination.ZERO)
             destination = Destination.from_slots(
                 up=up, down=down, left=left, right=right)
-        self.gather = IrregularGather(
-            pattern, mesh, axis_name=comm_axes, strategy=strategy,
-            blocksize=blocksize, destination=destination,
-            topology=Topology(p, shards_per_node or p), hw=hw,
-        )
-        self.strategy = self.gather.strategy
-        self.predicted_times = self.gather.predicted_times
+
+        self.predicted_times = None
+        if strategy == "auto":
+            # ROADMAP refinement: rank overlap vs condensed on the FULL
+            # per-step window — eqs. 19–22 plus the edge-ring recompute
+            # term of the interior/edge split (the generic §5 exchange
+            # models keep pricing the replicate/blockwise rungs; without
+            # the ring term the model mispicks overlap on tiles so small
+            # the four strip stencils recompute more than the whole tile)
+            from repro.comm import plan_cache, select
+            from repro.comm.exchange import measure_hw
+            from repro.core import perfmodel as pm
+
+            if hw is None:
+                hw = measure_hw(mesh, comm_axes)
+            bs = blocksize
+            if bs == "auto":
+                bs = select.choose_blocksize(pattern.indices, n, p,
+                                             topology=topo, hw=hw)
+            base_plan = plan_cache.get_comm_plan(
+                pattern.indices, n, p, blocksize=bs, topology=topo)
+            pred = dict(select.rank_strategies(
+                base_plan, pattern.r, hw,
+                materialize="dest" if destination is not None else None,
+                dest_slots=(destination.num_slots
+                            if destination is not None else None)))
+            w2d = pm.Heat2DWorkload(big_m=big_m, big_n=big_n,
+                                    mprocs=mprocs, nprocs=nprocs,
+                                    topology=topo)
+            win = pm.predict_heat2d_window(
+                w2d, hw,
+                materialize="full" if materialize == "full" else None)
+            # bridge the generic exchange-scale entries onto the window
+            # scale before the argmin compares them: shift replicate/
+            # blockwise by the delta that maps the generic condensed price
+            # to its full-window price, so all four entries carry the same
+            # (exchange + whole-tile compute) units
+            offset = win["condensed"] - pred["condensed"]
+            for rung in ("replicate", "blockwise"):
+                pred[rung] = max(pred[rung] + offset, 0.0)
+            pred["condensed"] = win["condensed"]
+            pred["overlap"] = win["overlap"]
+            strategy = min(pred, key=pred.get)
+            blocksize = bs
+            self.predicted_times = pred
+        self.strategy = strategy
         # split on the RESOLVED strategy: "auto" may pick overlap, whose
         # predicted win exists only if the interior/edge split actually runs
-        self.overlap = overlap or self.strategy == "overlap"
-        gather = self.gather
+        self.overlap = overlap or strategy == "overlap"
+        split = self.overlap
 
-        if materialize == "dest":
-            self._halo_args = ()
-        else:
+        # --- the per-step halo exchange + stencil as ONE ExchangeSchedule:
+        # the gather stage issues the exchange, the interior stage (when
+        # split) runs inside its collective window, the final stage unpacks
+        # the landed halos and applies the paper's Listing-8 update
+        from repro.comm.schedule import Schedule
+
+        sched = Schedule()
+        phi_ref = sched.input("phi", spec=self.spec)
+        flat = sched.compute(lambda phi: phi.reshape(-1), phi_ref,
+                             name="flatten")
+        halo_refs = ()
+        if materialize != "dest":
             # runtime halo index tables into the assembled x_copy; padding
             # reads the guaranteed-zero slot
             halo_idx = _halo_indices(big_m, big_n, mprocs, nprocs,
                                      zero_slot=n + 1)
-            axis_spec = P(comm_axes)
-            self._halo_args = tuple(
-                jax.device_put(a, NamedSharding(mesh, axis_spec))
-                for a in halo_idx)
-        split = self.overlap
+            halo_refs = tuple(
+                sched.constant(a, nm, spec=P(comm_axes))
+                for nm, a in zip(("up_i", "down_i", "left_i", "right_i"),
+                                 halo_idx))
+        g = sched.gather(
+            pattern, src=flat, destination=destination, name="halo",
+            finish_kwargs=(None if materialize == "dest"
+                           else dict(extra_slots=1, copy_own=False)))
 
-        def step_local(phi, *args):
-            gargs = args[:len(gather.plan_args)]
-            x_local = phi.reshape(-1)
-            # issue the exchange; everything reading only phi can overlap it
-            handle = gather.start_local(x_local, *gargs)
+        def stencil(x):
+            if use_kernel:
+                from repro.kernels import ops as kops
+                return kops.stencil2d(x, coef=coef)
+            from repro.kernels import ref as kref
+            return kref.stencil2d_ref(x, coef)
 
-            if split:
-                # interior update (cells 1..m-2 × 1..n-2) has no halo
-                # dependency — the scheduler hides the exchange behind it
-                if use_kernel:
-                    from repro.kernels import ops as kops
-                    inner = kops.stencil2d(phi, coef=coef)
-                else:
-                    from repro.kernels import ref as kref
-                    inner = kref.stencil2d_ref(phi, coef)
+        inner_refs = ()
+        if split:
+            # interior update (cells 1..m-2 × 1..n-2) has no halo
+            # dependency — it runs inside the exchange window
+            inner_refs = (sched.compute(stencil, phi_ref, name="interior"),)
 
+        def finalize(phi, landed, *rest):
             if materialize == "dest":
-                halos = handle.finish()    # {up,down,left,right} strips
-                up_v, dn_v = halos["up"], halos["down"]
-                lf_v, rt_v = halos["left"], halos["right"]
+                up_v, dn_v = landed["up"], landed["down"]
+                lf_v, rt_v = landed["left"], landed["right"]
             else:
-                up_i, dn_i, lf_i, rt_i = args[len(gather.plan_args):]
-                x_copy = handle.finish(extra_slots=1, copy_own=False)
-                up_v, dn_v = x_copy[up_i[0]], x_copy[dn_i[0]]
-                lf_v, rt_v = x_copy[lf_i[0]], x_copy[rt_i[0]]
+                up_i, dn_i, lf_i, rt_i = rest[:4]
+                rest = rest[4:]
+                up_v, dn_v = landed[up_i[0]], landed[dn_i[0]]
+                lf_v, rt_v = landed[lf_i[0]], landed[rt_i[0]]
             padded = jnp.zeros((m_loc + 2, n_loc + 2), phi.dtype)
             padded = padded.at[1:-1, 1:-1].set(phi)
             padded = padded.at[0, 1:-1].set(up_v)
@@ -184,24 +236,15 @@ class Heat2D:
             if split:
                 # only the one-cell edge ring consumes the landed halos,
                 # via four thin strips of `padded`
-                if use_kernel:
-                    from repro.kernels import ops as kops
-                    stencil = functools.partial(kops.stencil2d, coef=coef)
-                else:
-                    from repro.kernels import ref as kref
-                    stencil = functools.partial(kref.stencil2d_ref, coef=coef)
+                (inner,) = rest
                 top = stencil(padded[0:3, :])[1, 1:-1]
                 bottom = stencil(padded[-3:, :])[1, 1:-1]
                 left = stencil(padded[:, 0:3])[1:-1, 1]
                 right = stencil(padded[:, -3:])[1:-1, 1]
                 upd = inner.at[0, :].set(top).at[-1, :].set(bottom)
                 upd = upd.at[:, 0].set(left).at[:, -1].set(right)
-            elif use_kernel:
-                from repro.kernels import ops as kops
-                upd = kops.stencil2d(padded, coef=coef)[1:-1, 1:-1]
             else:
-                from repro.kernels import ref as kref
-                upd = kref.stencil2d_ref(padded, coef)[1:-1, 1:-1]
+                upd = stencil(padded)[1:-1, 1:-1]
 
             # mask: global boundary cells keep their value (paper copies
             # the boundary)
@@ -215,13 +258,16 @@ class Heat2D:
                         & (gcol > 0) & (gcol < big_n - 1))
             return jnp.where(interior, upd, phi)
 
-        in_specs = ((self.spec,) + gather.in_specs
-                    + (P(comm_axes),) * len(self._halo_args))
-        mapped = compat.shard_map(
-            step_local, mesh=mesh, in_specs=in_specs, out_specs=self.spec,
-            check_vma=False,
-        )
-        step_args = gather.plan_args + self._halo_args
+        out = sched.compute(finalize, phi_ref, g, *halo_refs, *inner_refs,
+                            name="update")
+        self.schedule = sched.compile(
+            mesh, axis_name=comm_axes, strategy=strategy,
+            blocksize=blocksize, topology=topo, hw=hw,
+            output=out, out_spec=self.spec)
+        self.gather = sched.exchange_of(g)
+        if self.predicted_times is None:
+            self.predicted_times = self.gather.predicted_times
+        mapped, step_args = self.schedule.mapped, self.schedule.step_args
 
         @functools.partial(jax.jit, static_argnames=("steps",))
         def run(phi, steps: int):

@@ -28,8 +28,9 @@ __all__ = [
     "predict_overlap", "predict_all", "STRATEGY_PREDICTORS",
     "put_components", "predict_put_v2", "predict_put_v3",
     "predict_put_overlap", "predict_put_replicate", "predict_put_all",
-    "PUT_STRATEGY_PREDICTORS",
+    "PUT_STRATEGY_PREDICTORS", "predict_schedule", "window_setup_time",
     "predict_heat2d", "Heat2DWorkload", "full_assembly_tax",
+    "heat2d_edge_ring_comp", "predict_heat2d_window",
 ]
 
 
@@ -451,6 +452,66 @@ PUT_STRATEGY_PREDICTORS = {
 }
 
 
+# --------------------------------------------------------------------------
+# Fused-window composition (eq. 23, docs/perf_model.md) — a chain of
+# exchanges issued inside ONE planned communication window
+# (``repro.comm.schedule.ExchangeSchedule``).  Each §5 predictor prices a
+# *standalone* exchange: its total includes, once, the per-window setup —
+# the cross-node synchronization every bulk-synchronous window pays before
+# any payload moves (the paper's barrier bracketing, eq. 18; one tau per
+# inter-node hop, serialized across the node count like eq. 13's per-node
+# latency sum).  A schedule consolidates K exchanges into one prepared
+# window: the collectives issue back-to-back inside one program, so the
+# setup is paid once and the remaining K-1 are saved.  The variable terms
+# (pack, payload, unpack, compute tails) are untouched — they are
+# per-stage physics — and the window can never beat its slowest stage.
+# --------------------------------------------------------------------------
+
+
+def window_setup_time(topo: Topology, hw: HardwareParams) -> float:
+    """Per-window setup: one tau per inter-node hop of the barrier that
+    brackets a bulk-synchronous exchange window (0 on a single node)."""
+    return hw.tau * max(0, topo.num_nodes - 1)
+
+
+def predict_schedule(stages, hw: HardwareParams) -> dict:
+    """Eq. 23: price a fused multi-exchange window.
+
+    ``stages``: sequence of ``(name, direction, workload, strategy)`` with
+    ``direction`` in ``{"get", "put"}`` and ``strategy`` a ladder rung or
+    ``None`` (pick the direction's §5 argmin per stage — different rungs
+    per stage, one shared consolidation point).  Returns::
+
+        {"total":          fused-window seconds,
+         "sum_standalone": back-to-back one-shot seconds (Σ per-stage),
+         "setup_saved":    (K-1) × window_setup_time,
+         "stages":         [(name, direction, strategy, seconds), ...]}
+
+    with ``total = max(sum_standalone - setup_saved, max stage time)``.
+    """
+    per = []
+    topo = None
+    for name, direction, w, strategy in stages:
+        if direction not in ("get", "put"):
+            raise ValueError(f"direction must be 'get' or 'put': {direction}")
+        predictors = (PUT_STRATEGY_PREDICTORS if direction == "put"
+                      else STRATEGY_PREDICTORS)
+        if strategy is None:
+            strategy, t = min(
+                ((s, float(fn(w, hw))) for s, fn in predictors.items()),
+                key=lambda kv: kv[1])
+        else:
+            t = float(predictors[strategy](w, hw))
+        per.append((name, direction, strategy, t))
+        topo = topo if topo is not None else w.topology
+    assert per, "predict_schedule needs at least one exchange stage"
+    times = [t for (_, _, _, t) in per]
+    saved = (len(per) - 1) * window_setup_time(topo, hw)
+    total = max(sum(times) - saved, max(times))
+    return {"total": float(total), "sum_standalone": float(sum(times)),
+            "setup_saved": float(saved), "stages": per}
+
+
 def _threads_of_node(topo: Topology, node: int) -> np.ndarray:
     lo = node * topo.shards_per_node
     return np.arange(lo, lo + topo.shards_per_node)
@@ -546,3 +607,47 @@ def predict_heat2d(
     # eq. (22): 3 * (m-2) * (n-2) * elem / w_private
     comp = 3.0 * (w.m - 2) * (w.n - 2) * hw.elem / hw.w_private
     return {"halo": steps * float(halo), "comp": steps * float(comp)}
+
+
+def heat2d_edge_ring_comp(w: Heat2DWorkload, hw: HardwareParams) -> float:
+    """Edge-ring compute cost of the Heat2D ``overlap`` split (per step).
+
+    The split runs the tile interior while the halo exchange is in flight,
+    then updates the one-cell edge ring from four thin strips of the padded
+    tile.  Each strip is a full 3-wide stencil band (the kernel computes
+    the whole band to extract its single ring row/column), so the ring
+    pays eq.-22 traffic on 3 cells per ring cell — the overhead the plain
+    eq. 19–22 window never sees, and the term that decides ``overlap`` vs
+    ``condensed`` for skinny tiles where the ring *is* the tile.
+    """
+    mi, ni = w.m - 2, w.n - 2          # interior tile (paper m/n incl. halo)
+    band_cells = 2 * 3 * (ni + 2) + 2 * 3 * (mi + 2)
+    return 3.0 * band_cells * hw.elem / hw.w_private
+
+
+def predict_heat2d_window(
+    w: Heat2DWorkload, hw: HardwareParams, steps: int = 1,
+    materialize: str | None = None,
+) -> dict[str, float]:
+    """Full per-step window cost of the two Heat2D execution shapes.
+
+    * ``"condensed"`` — eqs. 19–22 sequentially: halo exchange, then the
+      whole-tile update.
+    * ``"overlap"`` — the interior update (no halo dependency) hides the
+      exchange (max-composition), then the edge ring pays
+      ``heat2d_edge_ring_comp`` — the ROADMAP refinement: without the ring
+      term the model would call ``overlap`` free whenever compute covers
+      the exchange, mispicking on small tiles where the four 3-wide strips
+      recompute more than the whole tile costs.
+
+    ``strategy="auto"`` on ``Heat2D`` re-prices these two rungs with this
+    window cost (the generic §5 exchange models keep pricing the
+    ``replicate``/``blockwise`` rungs).
+    """
+    base = predict_heat2d(w, hw, steps=1, materialize=materialize)
+    mi, ni = w.m - 2, w.n - 2
+    interior = 3.0 * max(mi - 2, 0) * max(ni - 2, 0) * hw.elem / hw.w_private
+    ring = heat2d_edge_ring_comp(w, hw)
+    cond = base["halo"] + base["comp"]
+    ovl = max(base["halo"], interior) + ring
+    return {"condensed": steps * float(cond), "overlap": steps * float(ovl)}

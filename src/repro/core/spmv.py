@@ -52,7 +52,7 @@ from repro.comm.plan import CommPlan, Topology
 from repro.comm.scatter import IrregularScatter
 from repro.core.matrix import EllpackMatrix
 
-__all__ = ["DistributedSpMV"]
+__all__ = ["DistributedSpMV", "normal_equations_step"]
 
 
 def _spmv_local(x_copy, diag_l, vals_l, cols_l, *, shard_size, axis_name):
@@ -100,10 +100,17 @@ class DistributedSpMV:
         self.transpose = transpose
         if transpose:
             if use_kernel:
+                # validated here, at construction, so a misconfigured
+                # engine can never be built and fail only on first call
                 raise NotImplementedError(
-                    "transpose=True runs the scatter-accumulate path; the "
-                    "split Pallas kernels consume the gather-direction "
-                    "x_copy and are not wired to it yet")
+                    "DistributedSpMV(transpose=True, use_kernel=True) is "
+                    "not supported: the split Pallas kernels consume the "
+                    "gather-direction x_copy and are not wired to the "
+                    "scatter-accumulate path.  Supported alternatives: "
+                    "transpose=True with use_kernel=False (jnp "
+                    "scatter-accumulate, any strategy= rung), or "
+                    "transpose=False with use_kernel=True (forward "
+                    "product through the split kernels).")
             assert materialize is None, (
                 "materialize= is a gather-unpack knob; the transposed "
                 "product always accumulates straight into the owned slice")
@@ -406,3 +413,69 @@ class DistributedSpMV:
 
         out, _ = jax.lax.scan(body, x, None, length=steps)
         return out
+
+
+def normal_equations_step(
+    matrix: EllpackMatrix,
+    mesh: jax.sharding.Mesh,
+    *,
+    axis_name: str = "data",
+    strategy: str = "auto",
+    blocksize: int | str | None = None,
+    shards_per_node: int | None = None,
+    hw=None,
+    use_plan_cache: bool = True,
+):
+    """z = MᵀM x with M = (D + A), as ONE fused ``ExchangeSchedule``.
+
+    The normal-equations step (the CGNR/least-squares inner product) chains
+    the two SpMV directions: the forward gather-product ``y = M x`` and the
+    transposed scatter-product ``z = Mᵀ y``.  Run through two
+    ``DistributedSpMV`` engines it pays two plan resolutions, two windows
+    and an intermediate round trip; declared as one ``Schedule`` it shares
+    everything — the scatter stage derives its executor tables from the
+    gather stage's base plan (one O(nnz) preparation step total, exactly
+    like the forward/transpose engine pair), one hw-calibration memo hit
+    prices both stages, and the diagonal product ``D·y`` is scheduled
+    *after* the scatter stage so it runs inside the push collective's
+    window.
+
+    Returns the compiled ``ExchangeSchedule``: ``step(x_sharded) -> z``
+    (use ``step.shard_vector`` for placement; ``step.predicted_window``
+    holds the §5 fused-window pricing).
+    """
+    from repro.comm.schedule import Schedule
+
+    p = int(mesh.shape[axis_name]) if not isinstance(axis_name, tuple) \
+        else int(np.prod([mesh.shape[a] for a in axis_name]))
+    n = matrix.n
+    assert n % p == 0, "pad the matrix so n divides the mesh axis"
+    rows_per_shard = matrix.cols.shape[0] // p
+    pattern = AccessPattern.from_ellpack(matrix)
+    # forward product lands gathered x in EllPack slot order (the same
+    # Destination the forward engine registers on the jnp path)
+    destination = Destination.from_slots(
+        ellpack=matrix.cols.reshape(p, rows_per_shard, -1))
+
+    sched = Schedule()
+    x_ref = sched.input("x")
+    diag = sched.constant(matrix.diag, "diag")
+    vals = sched.constant(matrix.vals, "vals")
+    g = sched.gather(pattern, src=x_ref, destination=destination,
+                     name="gather_x")
+
+    def forward(x_l, d_l, v_l, delivered):
+        return d_l * x_l + (v_l * delivered["ellpack"]).sum(axis=-1)
+
+    y = sched.compute(forward, x_ref, diag, vals, g, name="y=Mx")
+    contrib = sched.compute(lambda y_l, v_l: v_l * y_l[:, None], y, vals,
+                            name="partials")
+    s = sched.scatter(pattern, contrib, reduce="add", name="scatter_t")
+    # scheduled after the scatter stage: D·y runs inside the push window
+    y_diag = sched.compute(lambda y_l, d_l: d_l * y_l, y, diag,
+                           name="diag_t")
+    z = sched.compute(lambda a, b: a + b, s, y_diag, name="z=Mty")
+    return sched.compile(
+        mesh, axis_name=axis_name, strategy=strategy, blocksize=blocksize,
+        topology=Topology(p, shards_per_node or p), hw=hw,
+        use_plan_cache=use_plan_cache, output=z)

@@ -30,7 +30,8 @@ from repro.models.layers import init_linear
 
 __all__ = ["init_moe", "moe_fwd", "moe_capacity",
            "moe_dispatch_pattern", "moe_dispatch_ref", "MoEDispatchGather",
-           "moe_combine_weights", "moe_combine_ref", "MoECombineScatter"]
+           "moe_combine_weights", "moe_combine_ref", "MoECombineScatter",
+           "moe_expert_local", "MoELayer"]
 
 
 def init_moe(key, cfg, dtype=jnp.float32):
@@ -445,3 +446,130 @@ class MoECombineScatter:
         """buf: (num_experts, capacity, ...) expert outputs sharded over
         the expert dim -> (num_tokens, ...) combined tokens, sharded."""
         return self._combine(buf)
+
+
+# ---------------------------------------------------------------------------
+# The fused serving-path layer: dispatch → expert → combine through ONE
+# ExchangeSchedule (repro.comm.schedule) — one shard_map, one planned window
+# ---------------------------------------------------------------------------
+
+
+def moe_expert_local(buf, w1, w2, w3=None, act="gelu"):
+    """Per-shard expert MLP: ``buf`` (E_loc, C, D) with this shard's expert
+    weights ``w1`` (E_loc, D, F) / ``w2`` (E_loc, F, D) (and ``w3`` under
+    swiglu).  Shared by ``MoELayer``'s compute stage and any composed
+    baseline so the two paths run the identical local math."""
+    w1 = w1.astype(buf.dtype)
+    w2 = w2.astype(buf.dtype)
+    h = jnp.einsum("ecd,edf->ecf", buf, w1)
+    if act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf,
+                                        w3.astype(buf.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+class MoELayer:
+    """Fused dispatch → expert MLP → combine via one ``ExchangeSchedule``.
+
+    The composed serving path pays three windows: the
+    ``MoEDispatchGather`` jit, the expert-MLP jit, the
+    ``MoECombineScatter`` jit — each with its own dispatch overhead, and
+    the middle one re-reading the landed expert buffers from HBM.
+    ``MoELayer`` declares the whole chain as one ``Schedule``:
+
+    * one gather stage (the token→expert ``Destination`` delivery of
+      ``MoEDispatchGather``), one compute stage (``moe_expert_local`` +
+      the combine-weight multiply), one scatter stage (the
+      ``reduce="add"`` push of ``MoECombineScatter``);
+    * both exchange stages share one base ``CommPlan`` (the combine's
+      executor tables are the transpose-derived delta) and one
+      hw-calibration memo hit;
+    * ``compile`` emits a **single** ``shard_map``: the expert compute and
+      the combine's own-shard accumulate run inside the scatter's
+      collective window, and the fused window is priced by
+      ``perfmodel.predict_schedule`` (``.predicted_window``).
+
+    Bit-identical to the composed
+    ``MoEDispatchGather → moe_expert_local → MoECombineScatter`` path on
+    every ladder rung (tested in ``tests/test_schedule.py``).
+
+    ``params``: ``{"w1": (E, D, F), "w2": (E, F, D)[, "w3": (E, D, F)]}``
+    (the ``init_moe`` layout), sharded over the expert dim at compile.
+    """
+
+    def __init__(self, params, top_e, top_w, num_tokens: int,
+                 num_experts: int, capacity: int, mesh, *,
+                 axis_name: str = "data", act: str = "gelu",
+                 strategy: str = "auto", blocksize=None,
+                 shards_per_node=None, hw=None, use_plan_cache: bool = True):
+        from repro.comm import AccessPattern, Destination, Schedule
+        from repro.comm.plan import Topology
+
+        p = int(mesh.shape[axis_name])
+        assert num_experts % p == 0 and num_tokens % p == 0
+        self.p = p
+        self.num_tokens = num_tokens
+        self.num_experts = num_experts
+        self.capacity = capacity
+        e_loc = num_experts // p
+        d = params["w1"].shape[1]
+
+        # one sort pipeline builds the dispatch pattern AND the combine
+        # weights (the pair shares the packing, like the two front doors)
+        packed = _pack_slots(top_e, num_tokens, num_experts, capacity)
+        idx, valid = moe_dispatch_pattern(
+            top_e, num_tokens, num_experts, capacity, p, packed=packed)
+        w_slot = moe_combine_weights(
+            top_e, top_w, num_tokens, num_experts, capacity, packed=packed)
+        self.idx, self.valid, self.w_slot = idx, valid, w_slot
+        pattern = AccessPattern.from_indices(idx, n=num_tokens)
+        slot_idx = np.where(valid, idx.astype(np.int64), Destination.ZERO)
+        destination = Destination.from_slots(slots=slot_idx.reshape(p, -1))
+        # invalid (over-capacity) slots: weight 0 -> contribution exactly 0
+        w_masked = (w_slot * valid).astype(np.float32)[:, None]
+
+        sched = Schedule()
+        x_ref = sched.input("tokens")
+        w1 = sched.constant(np.asarray(params["w1"]), "w1")
+        w2 = sched.constant(np.asarray(params["w2"]), "w2")
+        wexperts = (w1, w2)
+        if act == "swiglu":
+            wexperts += (sched.constant(np.asarray(params["w3"]), "w3"),)
+        wc = sched.constant(w_masked, "combine_w")
+        g = sched.gather(pattern, src=x_ref, destination=destination,
+                         name="dispatch")
+
+        def expert_fn(delivered, *weights):
+            *wx, wc_l = weights
+            w3_l = wx[2] if len(wx) == 3 else None
+            # tokens land in (expert, capacity) order; empty slots are
+            # exactly 0 and carry combine weight 0
+            buf = delivered["slots"].reshape(e_loc, capacity, d)
+            out = moe_expert_local(buf, wx[0], wx[1], w3_l, act)
+            flat = out.reshape(e_loc * capacity, 1, d)
+            return flat * wc_l.reshape(
+                e_loc * capacity, 1, 1).astype(flat.dtype)
+
+        y = sched.compute(expert_fn, g, *wexperts, wc, name="expert")
+        out = sched.scatter(pattern, y, reduce="add", name="combine")
+        self.schedule = sched.compile(
+            mesh, axis_name=axis_name, strategy=strategy,
+            blocksize=blocksize, topology=Topology(p, shards_per_node or p),
+            hw=hw, use_plan_cache=use_plan_cache, output=out)
+        self.gather = sched.exchange_of(g)
+        self.scatter = sched.exchange_of(out)
+        self.requested_strategy = strategy
+        self.strategies = self.schedule.strategies
+        self.predicted_times = self.schedule.predicted_times
+        self.predicted_window = self.schedule.predicted_window
+
+    def shard_tokens(self, x) -> jax.Array:
+        return self.schedule.shard_input(x)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """x: (num_tokens, d) sharded -> (num_tokens, d) combined expert
+        outputs, sharded — the full dispatch→expert→combine step in one
+        fused window."""
+        return self.schedule(x)
