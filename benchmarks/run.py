@@ -64,7 +64,7 @@ def main() -> None:
             fn(smoke=True)
         else:
             fn()
-        if name == "table3" and smoke:
+        if name in ("table3", "table5") and smoke:
             _write_bench_json(name, common.drain_rows(), smoke)
 
 

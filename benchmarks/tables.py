@@ -565,6 +565,88 @@ def table5_heat2d(big_m=512, big_n=1024, steps=100, smoke=False):
             f"vs_base={t/t_base:.2f}x "
             "(interior/edge split so halo exchange can overlap)")
 
+    table5_scan(smoke=smoke)
+
+
+def table5_scan(smoke=False):
+    """Per-iteration scan-window rows (eq. 23′): the scanned ``Heat2D.run``
+    loop and the CG solver, each against the per-step re-dispatch baseline
+    over the same single-step window and against the steady-state model."""
+    big_m, big_n, steps = (128, 256, 20) if smoke else (512, 1024, 100)
+    print(f"# table5.scan: persistent windows, {steps}-step loops")
+    hw = calibrate_host(elem_bytes=4)
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    w = pm.Heat2DWorkload(big_m=big_m, big_n=big_n, mprocs=2, nprocs=4,
+                          topology=Topology(8, 1))
+
+    # the scanned double-buffered overlap loop: Heat2D.run is ONE window
+    # around lax.scan; the baseline re-dispatches the identical one-step
+    # window (h.schedule) from a Python loop — same plan, same rung, the
+    # only difference is where the loop runs
+    h = Heat2D(mesh, big_m, big_n, coef=0.1, overlap=True, hw=hw,
+               n_steps_hint=steps)
+    phi = h.init_field(0)
+    t_scan = timeit(lambda p_: h.run(p_, steps), phi, iters=3, warmup=1)
+
+    def redispatch(p_):
+        x = p_
+        for _ in range(steps):
+            x = h.schedule(x)
+        return x
+
+    t_loop = timeit(redispatch, phi, iters=3, warmup=1)
+    scn = pm.predict_heat2d_scan(w, hw, steps)
+    pred_iter = scn["per_iter"]["overlap"]
+    meas_iter = t_scan / steps
+    acc = min(meas_iter, pred_iter) / max(meas_iter, pred_iter)
+    csv_row("table5.scan.heat2d", meas_iter * 1e6,
+            f"per_iter steps={steps} predicted_us={pred_iter*1e6:.0f} "
+            f"accuracy={acc:.2f} vs_redispatch={t_loop/t_scan:.2f}x "
+            "(double-buffered halos, one persistent window)")
+
+    # CG on the fused z = MtM p window: the scan carries (x, r, p); the
+    # baseline drives the same fused product window per iteration with the
+    # recurrence on the host
+    from repro.core.solvers import ConjugateGradient
+    from repro.core.spmv import normal_equations_step
+
+    mesh1d = _mesh8()
+    n, r_nz = (1 << 12, 8) if smoke else (1 << 14, 16)
+    k = 20 if smoke else 50
+    m = make_mesh_like_matrix(n, r_nz, seed=5)
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(n).astype(np.float32)
+    cg = ConjugateGradient(m, mesh1d, strategy="condensed", hw=hw,
+                           n_steps_hint=k)
+    carries = cg.carries(b)
+    t_scan = timeit(lambda *c: cg.schedule(*c, n_steps=k), *carries,
+                    iters=3, warmup=1)
+
+    step = normal_equations_step(m, mesh1d, strategy="condensed", hw=hw)
+
+    def cg_redispatch(x, r, pv):
+        for _ in range(k):
+            z = step(pv)
+            rs, pz = jnp.vdot(r, r), jnp.vdot(pv, z)
+            alpha = jnp.where(pz != 0, rs / jnp.where(pz != 0, pz, 1), 0)
+            x = x + alpha * pv
+            r2 = r - alpha * z
+            beta = jnp.where(rs != 0,
+                             jnp.vdot(r2, r2) / jnp.where(rs != 0, rs, 1), 0)
+            pv, r = r2 + beta * pv, r2
+        return x
+
+    t_loop = timeit(cg_redispatch, *carries, iters=3, warmup=1)
+    pred = cg.predicted_loop(k)
+    meas_iter = t_scan / k
+    pred_iter = pred["per_iter"] if pred is not None else meas_iter
+    acc = min(meas_iter, pred_iter) / max(meas_iter, pred_iter)
+    csv_row("table5.scan.cg", meas_iter * 1e6,
+            f"per_iter iters={k} n={n} predicted_us={pred_iter*1e6:.0f} "
+            f"accuracy={acc:.2f} vs_redispatch={t_loop/t_scan:.2f}x "
+            "(CGNR, one fused MtM window per iteration)")
+
 
 # --------------------------------------------------------------------------
 # Roofline report from dry-run artifacts

@@ -144,6 +144,7 @@ class IrregularExchange:
         candidates=None,
         use_plan_cache: bool = True,
         base_plan: CommPlan | None = None,
+        scan_steps: int | None = None,
     ):
         if isinstance(where, SharedVector):
             assert where.n == pattern.n, (where.n, pattern.n)
@@ -194,14 +195,18 @@ class IrregularExchange:
         self._prepare(base_plan)
 
         self.requested_strategy = strategy
+        self.scan_steps = scan_steps
         self.predicted_times: dict[str, float] | None = None
         if strategy == "auto":
             if hw is None:
                 hw = measure_hw(mesh, axis_name)
+            # scan_steps (a ScanSchedule resolving this stage) prices the
+            # rungs on the n-step steady-state loop cost — setup amortized
+            # over the persistent window — instead of the single-call cost
             ranked = select.rank_strategies(
                 self._ranking_plan(base_plan), pattern.r, hw,
                 candidates=candidates, direction=self.direction,
-                **self._price_kwargs())
+                scan_steps=scan_steps, **self._price_kwargs())
             self.predicted_times = dict(ranked)
             strategy = ranked[0][0]
         self.strategy = strategy

@@ -69,6 +69,8 @@ def rank_strategies(
     materialize: str | None = None,
     dest_slots: int | None = None,
     direction: str = "get",
+    scan_steps: int | None = None,
+    overlap_credit: float = 0.0,
 ) -> list[tuple[str, float]]:
     """[(strategy, predicted_seconds)] sorted fastest-first (§5 formulas).
 
@@ -82,6 +84,15 @@ def rank_strategies(
     through (see ``workload_from_plan``) so a consumer with a
     ``Destination`` descriptor ranks rungs by the targeted-unpack cost it
     will actually pay.
+
+    ``scan_steps`` re-prices every rung as a steady-state LOOP of that
+    many iterations inside one persistent scan window
+    (``perfmodel.scan_loop_cost``: window setup paid once, per-iteration
+    term thereafter, ``overlap_credit`` seconds of cross-step compute
+    hidden per iteration) — the ranking a ``ScanSchedule`` resolves
+    ``strategy="auto"`` stages on.  Loop scaling is monotone per rung but
+    NOT order-preserving across rungs: a rung that wins one call on cheap
+    setup can lose the loop once setup amortizes away.
     """
     pm = _perfmodel()
     if direction not in ("get", "put"):
@@ -92,6 +103,11 @@ def rank_strategies(
                   else pm.STRATEGY_PREDICTORS)
     names = tuple(candidates) if candidates else tuple(predictors)
     ranked = [(name, float(predictors[name](w, hw))) for name in names]
+    if scan_steps is not None:
+        setup = pm.window_setup_time(w.topology, hw)
+        ranked = [(name, pm.scan_loop_cost(t, setup, scan_steps,
+                                           overlap_credit=overlap_credit))
+                  for name, t in ranked]
     ranked.sort(key=lambda kv: kv[1])
     return ranked
 

@@ -11,6 +11,7 @@ from repro.core.plan import CommPlan, GatherCounts, Topology, build_comm_plan
 from repro.core.plan_cache import get_comm_plan
 from repro.core.spmv import DistributedSpMV
 from repro.core.heat2d import Heat2D
+from repro.core.solvers import ConjugateGradient, cg_solve
 from repro.core import (perfmodel, plan_cache, roofline, hlo_cost, strategies,
                         tune)
 
@@ -18,5 +19,6 @@ __all__ = [
     "EllpackMatrix", "make_mesh_like_matrix", "spmv_ref_np",
     "CommPlan", "GatherCounts", "Topology", "build_comm_plan",
     "get_comm_plan", "DistributedSpMV", "Heat2D",
+    "ConjugateGradient", "cg_solve",
     "perfmodel", "plan_cache", "roofline", "hlo_cost", "strategies", "tune",
 ]

@@ -29,8 +29,10 @@ __all__ = [
     "put_components", "predict_put_v2", "predict_put_v3",
     "predict_put_overlap", "predict_put_replicate", "predict_put_all",
     "PUT_STRATEGY_PREDICTORS", "predict_schedule", "window_setup_time",
+    "scan_loop_cost", "predict_scan_schedule",
     "predict_heat2d", "Heat2DWorkload", "full_assembly_tax",
     "heat2d_edge_ring_comp", "predict_heat2d_window",
+    "predict_heat2d_scan",
 ]
 
 
@@ -512,6 +514,66 @@ def predict_schedule(stages, hw: HardwareParams) -> dict:
             "setup_saved": float(saved), "stages": per}
 
 
+# --------------------------------------------------------------------------
+# Eq.-23 steady-state extension: a fused window re-entered n times inside
+# one persistent scan window (docs/perf_model.md "Steady-state loops").
+# A per-step re-dispatched loop pays the full window cost every iteration;
+# a ScanSchedule keeps the window open across the whole loop, so the setup
+# term is paid once and each iteration pays only the variable terms.  A
+# double-buffered stage additionally hides compute of the NEXT iteration
+# inside the in-flight window — the cross-step analogue of the overlap
+# rung — modeled as a flat per-iteration credit floored at the credit
+# itself (the hidden compute still has to run).
+# --------------------------------------------------------------------------
+
+
+def scan_loop_cost(t_call: float, setup: float, n_steps: int, *,
+                   overlap_credit: float = 0.0) -> float:
+    """Steady-state cost of ``n_steps`` iterations of one exchange window
+    inside a persistent scan window::
+
+        T_loop = T_setup + n * max(T_call - T_setup - credit, credit)
+
+    ``t_call`` is the one-shot window cost (setup included), so the
+    per-iteration term strips the setup (paid once for the loop) and any
+    cross-step ``overlap_credit``, floored at the credit — hiding compute
+    inside the window never makes the compute itself free."""
+    steady = max(float(t_call) - float(setup) - float(overlap_credit),
+                 float(overlap_credit), 0.0)
+    return float(setup) + int(n_steps) * steady
+
+
+def predict_scan_schedule(stages, hw: HardwareParams, n_steps: int, *,
+                          overlap_credit: float = 0.0) -> dict:
+    """Eq.-23 steady-state extension: price ``n_steps`` iterations of a
+    fused multi-exchange window kept open across a scan.
+
+    ``stages`` is the ``predict_schedule`` stage-spec list.  Returns::
+
+        {"total":          T_setup + n * per_iter,
+         "per_iter":       max(per_call - setup - credit, credit),
+         "per_call":       the eq.-23 one-shot fused-window cost,
+         "setup":          window_setup_time (paid once for the loop),
+         "sum_redispatch": n * per_call — the per-step re-dispatch
+                           baseline (one fresh window per iteration),
+         "n_steps", "overlap_credit",
+         "stages":         the per-stage terms of the one-shot window}
+    """
+    win = predict_schedule(stages, hw)
+    topo = stages[0][2].topology
+    setup = window_setup_time(topo, hw)
+    per_call = win["total"]
+    per_iter = max(per_call - setup - overlap_credit, overlap_credit, 0.0)
+    return {"total": float(setup + n_steps * per_iter),
+            "per_iter": float(per_iter),
+            "per_call": float(per_call),
+            "setup": float(setup),
+            "sum_redispatch": float(n_steps * per_call),
+            "n_steps": int(n_steps),
+            "overlap_credit": float(overlap_credit),
+            "stages": win["stages"]}
+
+
 def _threads_of_node(topo: Topology, node: int) -> np.ndarray:
     lo = node * topo.shards_per_node
     return np.arange(lo, lo + topo.shards_per_node)
@@ -651,3 +713,42 @@ def predict_heat2d_window(
     cond = base["halo"] + base["comp"]
     ovl = max(base["halo"], interior) + ring
     return {"condensed": steps * float(cond), "overlap": steps * float(ovl)}
+
+
+def predict_heat2d_scan(
+    w: Heat2DWorkload, hw: HardwareParams, steps: int,
+    materialize: str | None = None,
+) -> dict:
+    """Steady-state Heat2D loop cost under ONE persistent scan window
+    (``Heat2D.run`` on a ``ScanSchedule``) — the eq. 19–22 analogue of
+    ``predict_scan_schedule``.
+
+    * ``"condensed"`` — the whole-tile update repeats inside the window:
+      the per-window setup is paid once, each iteration pays the variable
+      halo terms plus eq.-22 compute (floored at the compute — the update
+      always runs).
+    * ``"overlap"`` — the double-buffered split: step k+1's halo exchange
+      is issued right after step k's edge ring lands in the half-updated
+      field, so the ENTIRE next interior update hides inside the in-flight
+      window; each iteration pays ring + max(halo - setup, interior).
+
+    Returns ``{"condensed", "overlap"}`` loop totals plus ``"per_iter"``
+    (both per-iteration terms), ``"setup"``, and ``"redispatch"`` — the
+    per-step re-dispatch baseline (``predict_heat2d_window × steps``) that
+    ``table5`` compares the scan path against.
+    """
+    base = predict_heat2d(w, hw, steps=1, materialize=materialize)
+    win = predict_heat2d_window(w, hw, steps=1, materialize=materialize)
+    setup = window_setup_time(w.topology, hw)
+    mi, ni = w.m - 2, w.n - 2
+    interior = 3.0 * max(mi - 2, 0) * max(ni - 2, 0) * hw.elem / hw.w_private
+    ring = heat2d_edge_ring_comp(w, hw)
+    per_cond = max(win["condensed"] - setup, base["comp"])
+    per_ovl = ring + max(base["halo"] - setup, interior)
+    return {"condensed": float(setup + steps * per_cond),
+            "overlap": float(setup + steps * per_ovl),
+            "per_iter": {"condensed": float(per_cond),
+                         "overlap": float(per_ovl)},
+            "setup": float(setup),
+            "redispatch": {"condensed": float(steps * win["condensed"]),
+                           "overlap": float(steps * win["overlap"])}}

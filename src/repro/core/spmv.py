@@ -52,7 +52,8 @@ from repro.comm.plan import CommPlan, Topology
 from repro.comm.scatter import IrregularScatter
 from repro.core.matrix import EllpackMatrix
 
-__all__ = ["DistributedSpMV", "normal_equations_step"]
+__all__ = ["DistributedSpMV", "normal_equations_step",
+           "normal_equations_stages"]
 
 
 def _spmv_local(x_copy, diag_l, vals_l, cols_l, *, shard_size, axis_name):
@@ -415,6 +416,48 @@ class DistributedSpMV:
         return out
 
 
+def normal_equations_stages(sched, matrix: EllpackMatrix, p: int, x_ref):
+    """Declare the z = MᵀM x stage graph on an existing ``Schedule``.
+
+    ``x_ref`` is the (already declared) input/stage whose value is the
+    length-n operand; the return value is the ``z`` stage ref.  Shared by
+    ``normal_equations_step`` (one-shot window) and the iterative solvers
+    (``repro.core.solvers``), which embed the same graph inside a
+    ``ScanSchedule`` body next to their own recurrence stages.
+
+    The graph chains the two SpMV directions in one window: gather-product
+    ``y = M x`` (EllPack-slot ``Destination``), push-product ``z = Mᵀ y``
+    whose scatter stage derives its executor tables from the gather stage's
+    base plan, and the diagonal product ``D·y`` scheduled after the scatter
+    so it runs inside the push collective's window.
+    """
+    n = matrix.n
+    assert n % p == 0, "pad the matrix so n divides the mesh axis"
+    rows_per_shard = matrix.cols.shape[0] // p
+    pattern = AccessPattern.from_ellpack(matrix)
+    # forward product lands gathered x in EllPack slot order (the same
+    # Destination the forward engine registers on the jnp path)
+    destination = Destination.from_slots(
+        ellpack=matrix.cols.reshape(p, rows_per_shard, -1))
+
+    diag = sched.constant(matrix.diag, "diag")
+    vals = sched.constant(matrix.vals, "vals")
+    g = sched.gather(pattern, src=x_ref, destination=destination,
+                     name="gather_x")
+
+    def forward(x_l, d_l, v_l, delivered):
+        return d_l * x_l + (v_l * delivered["ellpack"]).sum(axis=-1)
+
+    y = sched.compute(forward, x_ref, diag, vals, g, name="y=Mx")
+    contrib = sched.compute(lambda y_l, v_l: v_l * y_l[:, None], y, vals,
+                            name="partials")
+    s = sched.scatter(pattern, contrib, reduce="add", name="scatter_t")
+    # scheduled after the scatter stage: D·y runs inside the push window
+    y_diag = sched.compute(lambda y_l, d_l: d_l * y_l, y, diag,
+                           name="diag_t")
+    return sched.compute(lambda a, b: a + b, s, y_diag, name="z=Mty")
+
+
 def normal_equations_step(
     matrix: EllpackMatrix,
     mesh: jax.sharding.Mesh,
@@ -448,33 +491,9 @@ def normal_equations_step(
 
     p = int(mesh.shape[axis_name]) if not isinstance(axis_name, tuple) \
         else int(np.prod([mesh.shape[a] for a in axis_name]))
-    n = matrix.n
-    assert n % p == 0, "pad the matrix so n divides the mesh axis"
-    rows_per_shard = matrix.cols.shape[0] // p
-    pattern = AccessPattern.from_ellpack(matrix)
-    # forward product lands gathered x in EllPack slot order (the same
-    # Destination the forward engine registers on the jnp path)
-    destination = Destination.from_slots(
-        ellpack=matrix.cols.reshape(p, rows_per_shard, -1))
-
     sched = Schedule()
     x_ref = sched.input("x")
-    diag = sched.constant(matrix.diag, "diag")
-    vals = sched.constant(matrix.vals, "vals")
-    g = sched.gather(pattern, src=x_ref, destination=destination,
-                     name="gather_x")
-
-    def forward(x_l, d_l, v_l, delivered):
-        return d_l * x_l + (v_l * delivered["ellpack"]).sum(axis=-1)
-
-    y = sched.compute(forward, x_ref, diag, vals, g, name="y=Mx")
-    contrib = sched.compute(lambda y_l, v_l: v_l * y_l[:, None], y, vals,
-                            name="partials")
-    s = sched.scatter(pattern, contrib, reduce="add", name="scatter_t")
-    # scheduled after the scatter stage: D·y runs inside the push window
-    y_diag = sched.compute(lambda y_l, d_l: d_l * y_l, y, diag,
-                           name="diag_t")
-    z = sched.compute(lambda a, b: a + b, s, y_diag, name="z=Mty")
+    z = normal_equations_stages(sched, matrix, p, x_ref)
     return sched.compile(
         mesh, axis_name=axis_name, strategy=strategy, blocksize=blocksize,
         topology=Topology(p, shards_per_node or p), hw=hw,
