@@ -1,0 +1,129 @@
+"""Schema gate for the BENCH_*.json perf-trajectory artifacts.
+
+CI runs this between the smoke bench and the artifact upload so a
+malformed artifact fails the job instead of silently poisoning the
+per-PR trajectory.  Checked, per file:
+
+* top level: ``{"bench": str, "smoke": bool, "rows": list}``;
+* every row: ``{"name": str, "us_per_call": number >= 0, "derived": str}``
+  with a non-empty dotted name;
+* ``BENCH_table3.json`` additionally carries the plan-acquisition
+  ``telemetry`` block (``repro.comm.telemetry.PlanTelemetry.snapshot()``):
+  ``sources`` covering exactly the five ``PLAN_SOURCES``, per-source
+  ``build_seconds``, and a ``total`` consistent with the source counts —
+  with at least one hot-path acquisition recorded (the dynamic rows ran);
+* table3 must include the ``table3.dynamic.*`` rows.
+
+Usage:  python -m benchmarks.check_bench_schema BENCH_table3.json ...
+Exits nonzero listing every violation found.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# mirrors repro.comm.telemetry.PLAN_SOURCES without importing jax at
+# check time (the gate must run in a bare interpreter)
+PLAN_SOURCES = ("memory-hit", "disk-hit", "bucket-reuse", "device-derive",
+                "host-build")
+
+
+def check_rows(doc: dict, errors: list, path: str) -> None:
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append(f"{path}: 'rows' must be a non-empty list")
+        return
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{path}: rows[{i}] is not an object")
+            continue
+        name = row.get("name")
+        if not isinstance(name, str) or "." not in name:
+            errors.append(f"{path}: rows[{i}].name must be a dotted string, "
+                          f"got {name!r}")
+        us = row.get("us_per_call")
+        if not isinstance(us, (int, float)) or us < 0:
+            errors.append(f"{path}: rows[{i}].us_per_call must be a "
+                          f"non-negative number, got {us!r}")
+        if not isinstance(row.get("derived"), str):
+            errors.append(f"{path}: rows[{i}].derived must be a string")
+
+
+def check_telemetry(doc: dict, errors: list, path: str) -> None:
+    tel = doc.get("telemetry")
+    if not isinstance(tel, dict):
+        errors.append(f"{path}: table3 must carry a 'telemetry' block "
+                      "(plan-acquisition counters)")
+        return
+    sources = tel.get("sources")
+    if not isinstance(sources, dict) or set(sources) != set(PLAN_SOURCES):
+        errors.append(f"{path}: telemetry.sources must cover exactly "
+                      f"{PLAN_SOURCES}, got "
+                      f"{sorted(sources) if isinstance(sources, dict) else sources!r}")
+        return
+    if not all(isinstance(v, int) and v >= 0 for v in sources.values()):
+        errors.append(f"{path}: telemetry.sources counts must be "
+                      f"non-negative ints, got {sources}")
+    build = tel.get("build_seconds")
+    if not isinstance(build, dict) or not set(build) <= set(PLAN_SOURCES):
+        errors.append(f"{path}: telemetry.build_seconds must map known "
+                      f"sources to seconds, got {build!r}")
+    elif not all(isinstance(v, (int, float)) and v >= 0
+                 for v in build.values()):
+        errors.append(f"{path}: telemetry.build_seconds values must be "
+                      f"non-negative numbers, got {build}")
+    total = tel.get("total")
+    if total != sum(sources.values()):
+        errors.append(f"{path}: telemetry.total ({total!r}) != sum of "
+                      f"source counts ({sum(sources.values())})")
+    hot = sum(v for s, v in sources.items() if s != "host-build")
+    if hot <= 0:
+        errors.append(f"{path}: telemetry records no hot-path acquisition "
+                      "(memory/disk/bucket/device) — the dynamic rows "
+                      "cannot have run")
+
+
+def check_file(path: str) -> list:
+    errors: list = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level must be an object"]
+    bench = doc.get("bench")
+    if not isinstance(bench, str) or not bench:
+        errors.append(f"{path}: 'bench' must be a non-empty string")
+    if not isinstance(doc.get("smoke"), bool):
+        errors.append(f"{path}: 'smoke' must be a boolean")
+    check_rows(doc, errors, path)
+    if bench == "table3":
+        check_telemetry(doc, errors, path)
+        names = {r.get("name", "") for r in doc.get("rows", [])
+                 if isinstance(r, dict)}
+        if not any(n.startswith("table3.dynamic.") for n in names):
+            errors.append(f"{path}: missing table3.dynamic.* rows "
+                          "(per-batch routed MoE bench)")
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.check_bench_schema "
+              "BENCH_table3.json [...]", file=sys.stderr)
+        return 2
+    failures = []
+    for path in argv:
+        errs = check_file(path)
+        if errs:
+            failures.extend(errs)
+        else:
+            print(f"OK {path}")
+    for e in failures:
+        print(f"SCHEMA ERROR {e}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

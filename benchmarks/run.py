@@ -31,12 +31,20 @@ def _ensure_devices():
 def _write_bench_json(name: str, rows, smoke: bool) -> None:
     """Machine-readable per-PR perf trajectory (BENCH_<name>.json at the
     repo root, next to the CSV the CI job tees) — every csv_row of the
-    bench, schedule + scatter rows included."""
+    bench, schedule + scatter rows included.  table3 additionally carries
+    the plan-acquisition telemetry of the whole bench run (where every
+    executor table came from: memory/disk/bucket/device/host — the §5
+    T_plan closure; see repro.comm.telemetry)."""
     import json
 
+    payload = {"bench": name, "smoke": smoke, "rows": rows}
+    if name == "table3":
+        from repro.comm import telemetry
+
+        payload["telemetry"] = telemetry.stats.snapshot()
     path = f"BENCH_{name}.json"
     with open(path, "w") as f:
-        json.dump({"bench": name, "smoke": smoke, "rows": rows}, f, indent=1)
+        json.dump(payload, f, indent=1)
     print(f"# wrote {path} ({len(rows)} rows)")
 
 

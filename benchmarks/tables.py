@@ -143,6 +143,7 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50, smoke=False):
     table3_moe_dispatch(smoke=smoke, iters=iters)
     table3_scatter(smoke=smoke, iters=iters)
     table3_schedule(smoke=smoke, iters=iters)
+    table3_dynamic(smoke=smoke, iters=iters)
     return results
 
 
@@ -184,7 +185,7 @@ def table3_moe_dispatch(n_tok=1 << 14, d=32, smoke=False, iters=50):
     from repro.comm import select
     from repro.core import tune
     from repro.models.moe import (MoEDispatchGather, moe_dispatch_pattern,
-                                  moe_dispatch_ref)
+                                  moe_dispatch_ref, random_router)
 
     if smoke:
         n_tok, d, iters = 1 << 12, 8, 5
@@ -195,9 +196,7 @@ def table3_moe_dispatch(n_tok=1 << 14, d=32, smoke=False, iters=50):
     mesh = _mesh8()
     rng = np.random.default_rng(3)
     # zipf-skewed routing: experts differ in load, like trained routers
-    weights = 1.0 / np.arange(1, e_total + 1)
-    weights /= weights.sum()
-    top_e = rng.choice(e_total, size=(n_tok, k), p=weights)
+    top_e, _ = random_router(3, n_tok, e_total, k)
     x_host = rng.standard_normal((n_tok, d)).astype(np.float32)
     idx, valid = moe_dispatch_pattern(top_e, n_tok, e_total, cap, 8)
     ref = moe_dispatch_ref(x_host, idx, valid, e_total, cap)
@@ -247,7 +246,8 @@ def table3_scatter(n=1 << 17, r_nz=16, smoke=False, iters=50):
     from repro.core import tune
     from repro.core.matrix import spmv_t_ref_np
     from repro.models.moe import (MoECombineScatter, moe_combine_ref,
-                                  moe_combine_weights, moe_dispatch_pattern)
+                                  moe_combine_weights, moe_dispatch_pattern,
+                                  random_router)
 
     if smoke:
         n, iters = 1 << 14, 5
@@ -301,10 +301,7 @@ def table3_scatter(n=1 << 17, r_nz=16, smoke=False, iters=50):
     k, e_total = 2, 32
     cap = int(1.25 * n_tok * k / e_total)
     rng = np.random.default_rng(3)
-    weights = 1.0 / np.arange(1, e_total + 1)
-    weights /= weights.sum()
-    top_e = rng.choice(e_total, size=(n_tok, k), p=weights)
-    top_w = rng.random((n_tok, k)).astype(np.float32)
+    top_e, top_w = random_router(3, n_tok, e_total, k)
     buf = rng.standard_normal((e_total, cap, d)).astype(np.float32)
     idx, valid = moe_dispatch_pattern(top_e, n_tok, e_total, cap, 8)
     w_slot = moe_combine_weights(top_e, top_w, n_tok, e_total, cap)
@@ -356,7 +353,7 @@ def table3_schedule(smoke=False, iters=50):
     from repro.core.matrix import spmv_ref_np, spmv_t_ref_np
     from repro.core.spmv import normal_equations_step
     from repro.models.moe import (MoECombineScatter, MoEDispatchGather,
-                                  MoELayer, moe_expert_local)
+                                  MoELayer, moe_expert_local, random_router)
 
     mesh = _mesh8()
     print("# table3 schedule: fused ExchangeSchedule windows vs back-to-back"
@@ -367,10 +364,7 @@ def table3_schedule(smoke=False, iters=50):
     f, k, e_total = 2 * d, 2, 32
     cap = int(1.25 * n_tok * k / e_total)
     rng = np.random.default_rng(7)
-    weights = 1.0 / np.arange(1, e_total + 1)
-    weights /= weights.sum()
-    top_e = rng.choice(e_total, size=(n_tok, k), p=weights)
-    top_w = rng.random((n_tok, k)).astype(np.float32)
+    top_e, top_w = random_router(7, n_tok, e_total, k)
     x_host = rng.standard_normal((n_tok, d)).astype(np.float32)
     params = {
         "w1": (rng.standard_normal((e_total, d, f)) * 0.1).astype(np.float32),
@@ -451,6 +445,103 @@ def table3_schedule(smoke=False, iters=50):
             f"vs_baseline={t_fused/t_base:.2f}x")
     csv_row("table3.schedule.normal_eq.baseline", t_base * 1e6,
             "back_to_back=forward+transpose (2 windows)")
+
+
+# --------------------------------------------------------------------------
+# Table 3f: per-batch routing — the DynamicPattern tier (repro.comm.dynamic)
+# vs the rebuild-every-batch baseline, with the T_plan-inclusive §5 pricing
+# (perfmodel.plan_build_time threaded through rank_strategies(plan_cost=))
+# --------------------------------------------------------------------------
+
+def table3_dynamic(smoke=False, iters=50):
+    import time as _time
+
+    from repro.comm import telemetry
+    from repro.core import tune
+    from repro.models.moe import DynamicMoELayer, MoELayer, random_router
+
+    n_tok, d = (1 << 12, 8) if smoke else (1 << 14, 32)
+    f, k, e_total = 2 * d, 2, 32
+    cap = int(1.25 * n_tok * k / e_total)
+    n_batches = 4 if smoke else 8
+    print(f"# table3 dynamic: per-batch routed MoE — device-derived tables "
+          f"vs rebuild-every-batch (tokens={n_tok}, d={d}, "
+          f"batches={n_batches})")
+    mesh = _mesh8()
+    rng = np.random.default_rng(9)
+    params = {
+        "w1": (rng.standard_normal((e_total, d, f)) * 0.1).astype(np.float32),
+        "w2": (rng.standard_normal((e_total, f, d)) * 0.1).astype(np.float32),
+    }
+    routings = [random_router(100 + i, n_tok, e_total, k)
+                for i in range(n_batches)]
+    x_host = rng.standard_normal((n_tok, d)).astype(np.float32)
+    hw_tok = tune.measure_hardware(mesh, "data").replace(elem=4 * d)
+    bs = n_tok // 8 // 16
+
+    # -- dynamic: one envelope plan, per-batch in-jit table derivation --
+    layer = DynamicMoELayer(params, routings[0][0], n_tok, e_total, cap,
+                            mesh, strategy="auto", blocksize=bs,
+                            shards_per_node=1, hw=hw_tok)
+    x = layer.shard_tokens(x_host)
+    jax.block_until_ready(layer(x, *routings[0]))   # warmup: trace once
+    snap = telemetry.stats.snapshot()
+
+    def run_all():
+        out = None
+        for te, tw in routings:
+            out = layer(x, te, tw)
+        return out
+
+    t_dyn = timeit(run_all, iters=max(3, iters // 10), warmup=1) / n_batches
+    tel = telemetry.stats.since(snap)
+    assert tel["host-build"] == 0, (
+        f"dynamic path must be host-free after warmup, saw {tel}")
+    gs, ss = layer.strategies["dispatch"], layer.strategies["combine"]
+    # each rung prediction already carries plan_cost (the device-derive
+    # T_plan); ONE derivation serves both directions, so count it once
+    pred_dyn = (layer.predicted_times["dispatch"][gs]
+                + layer.predicted_times["combine"][ss] - layer.plan_time)
+    acc = min(t_dyn, pred_dyn) / max(t_dyn, pred_dyn)
+    csv_row("table3.dynamic.per_batch", t_dyn * 1e6,
+            f"strategies={gs}+{ss} predicted_us={pred_dyn*1e6:.1f} "
+            f"accuracy={acc:.2f} t_plan_us={layer.plan_time*1e6:.2f} "
+            f"telemetry=" + "/".join(f"{s}:{c}" for s, c in tel.items()))
+
+    # -- baseline: honest host rebuild (plan + trace + compile) per batch --
+    t_host_plan = pm.plan_build_time(e_total * cap, 1, hw_tok,
+                                     source="host-build")
+    y_dyn0 = np.asarray(layer(x, *routings[0]))
+    rebuild_times = []
+    for te, tw in routings[:min(n_batches, 3)]:
+        t0 = _time.perf_counter()
+        base = MoELayer(params, te, tw, n_tok, e_total, cap, mesh,
+                        strategy="condensed", blocksize=bs,
+                        shards_per_node=1, hw=hw_tok, use_plan_cache=False)
+        y = jax.block_until_ready(base(base.shard_tokens(x_host)))
+        rebuild_times.append(_time.perf_counter() - t0)
+        if (te, tw) is routings[0]:
+            np.testing.assert_allclose(y_dyn0, np.asarray(y), rtol=2e-4,
+                                       atol=2e-4)
+    t_rebuild = float(np.median(rebuild_times))
+    # static per-step cost once a fresh host plan exists (no T_plan term),
+    # and the rebuild's one-time cost on top — the break-even question:
+    # after how many reuses of ONE routing does a host rebuild beat the
+    # per-batch derivation?  (perfmodel.replan_break_even_steps)
+    pred_static = (layer.predicted_times["dispatch"][gs]
+                   + layer.predicted_times["combine"][ss]
+                   - 2 * layer.plan_time)
+    pred_rebuild = pred_static + t_host_plan
+    be = pm.replan_break_even_steps(t_host_plan, t_dyn, pred_static)
+    csv_row("table3.dynamic.rebuild_baseline", t_rebuild * 1e6,
+            f"predicted_us={pred_rebuild*1e6:.1f} (excl. trace+compile) "
+            f"t_plan_host_us={t_host_plan*1e6:.2f} "
+            f"vs_dynamic={t_rebuild/t_dyn:.1f}x "
+            f"break_even_steps={be:.0f}")
+    assert t_dyn < t_rebuild, (
+        f"per-batch dynamic ({t_dyn:.4f}s) must beat rebuild-every-batch "
+        f"({t_rebuild:.4f}s)")
+    return {"dynamic": t_dyn, "rebuild": t_rebuild}
 
 
 # --------------------------------------------------------------------------

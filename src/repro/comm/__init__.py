@@ -41,23 +41,28 @@ from repro.comm.shared import SharedVector
 from repro.comm.plan import (CommPlan, GatherCounts, ScatterPlan, Topology,
                              attach_destination, build_comm_plan,
                              blockwise_block_counts, derive_scatter_plan)
-from repro.comm.plan_cache import get_comm_plan, get_scatter_plan
+from repro.comm.plan_cache import (get_comm_plan, get_envelope_plan,
+                                   get_scatter_plan)
+from repro.comm.dynamic import (DynamicPattern, derive_gather_tables,
+                                derive_scatter_tables, envelope_s_max)
 from repro.comm.strategies import SCATTER_REDUCES, STRATEGIES
 from repro.comm.exchange import IrregularExchange
 from repro.comm.gather import IrregularGather, OverlapHandle
 from repro.comm.scatter import IrregularScatter, ScatterHandle
 from repro.comm.schedule import ExchangeSchedule, Schedule, StageRef
 from repro.comm import plan, plan_cache, pattern, shared, strategies, select
-from repro.comm import exchange, gather, scatter, schedule
+from repro.comm import dynamic, exchange, gather, scatter, schedule
+from repro.comm import telemetry
 
 __all__ = [
     "AccessPattern", "Destination", "SharedVector", "IrregularExchange",
     "IrregularGather", "IrregularScatter", "OverlapHandle", "ScatterHandle",
     "ExchangeSchedule", "Schedule", "StageRef",
-    "CommPlan", "GatherCounts", "ScatterPlan", "Topology",
+    "CommPlan", "GatherCounts", "ScatterPlan", "Topology", "DynamicPattern",
     "attach_destination", "build_comm_plan", "blockwise_block_counts",
     "derive_scatter_plan", "get_comm_plan", "get_scatter_plan",
-    "STRATEGIES", "SCATTER_REDUCES",
+    "get_envelope_plan", "derive_gather_tables", "derive_scatter_tables",
+    "envelope_s_max", "STRATEGIES", "SCATTER_REDUCES",
     "plan", "plan_cache", "pattern", "shared", "strategies", "select",
-    "exchange", "gather", "scatter", "schedule",
+    "dynamic", "exchange", "gather", "scatter", "schedule", "telemetry",
 ]

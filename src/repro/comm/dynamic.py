@@ -1,0 +1,260 @@
+"""Device-side plan derivation for capacity-bounded dynamic patterns.
+
+Every other module in ``repro.comm`` assumes the paper's premise: the access
+pattern is known once, up front, so the O(nnz) preparation step (§4.3.1)
+runs on the host exactly once.  The repo's flagship pattern breaks that
+premise — MoE token→expert routing changes *every batch* — and at traffic
+rates the host build + content hash sit on the hot path with a plan cache
+that can only miss.
+
+The way out is that capacity-bounded patterns have *fixed shape*: a router
+always produces ``(num_experts, capacity)`` slots over ``num_tokens``
+tokens, so every executor table of the condensed rung has a static bound —
+the per-pair unique count can never exceed ``min(shard_size,
+rows_per_shard * r)``.  With that **envelope** ``s_max`` fixed at trace
+time, the tables themselves become ordinary fixed-shape XLA computations:
+
+* ``derive_gather_tables`` reproduces ``plan.build_comm_plan``'s condensed
+  tables (``send_local_idx`` / ``recv_global_idx``) in-jit, bit-identical
+  to the host build at the same ``s_max``;
+* ``derive_scatter_tables`` reproduces ``plan.derive_scatter_plan``'s put
+  duals (``cond_msg_idx`` / ``own_tgt_idx`` / ``win_mask`` / ``touched``)
+  from one shared derivation pass — the ``CommPlan.transpose()`` semantics
+  carried over, so a fused dispatch→combine pair derives BOTH directions
+  from a single sort.
+
+``DynamicPattern`` is the front door: it wraps a representative *template*
+``AccessPattern`` (fixing ``m``, ``r``, ``n`` and the envelope) and is
+accepted by ``IrregularGather`` / ``IrregularScatter`` / ``Schedule``
+wherever an ``AccessPattern`` is.  The host-side envelope plan those front
+doors resolve (via ``plan_cache.get_envelope_plan`` — the bucketed-reuse
+tier) provides the static scalars and the §5 pricing; the per-batch tables
+come from ``derive_plan_args(cols)`` inside the consumer's own ``jit`` and
+flow through the *unchanged* ``shard_map`` in_specs and strategy-local
+functions.  See ``models.moe.DynamicMoELayer`` for the proving consumer
+and ``docs/comm_api.md`` for the walkthrough.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.pattern import AccessPattern
+
+__all__ = ["DynamicPattern", "DynamicGatherTables", "DynamicScatterTables",
+           "envelope_s_max", "derive_gather_tables", "derive_scatter_tables"]
+
+# Rungs whose executor tables the device derivation covers: condensed and
+# its own/foreign-split consumption (overlap) share the same two tables.
+DYNAMIC_STRATEGIES = ("condensed", "overlap")
+
+
+def envelope_s_max(m: int, r: int, n: int, p: int) -> int:
+    """The capacity bound on any per-pair unique count.
+
+    Reader shard q can need at most ``rows_per_shard * r`` distinct
+    elements in total, and owner shard s only owns ``shard_size`` elements
+    — whichever is smaller bounds every (s, q) message for every routing
+    the pattern shape admits.
+
+    >>> envelope_s_max(m=64, r=1, n=1024, p=8)   # 8 slots/shard, 1 idx each
+    8
+    >>> envelope_s_max(m=4096, r=2, n=64, p=8)   # tiny vector: shard wins
+    8
+    """
+    assert n % p == 0 and m % p == 0, (n, m, p)
+    return max(1, min(n // p, (m // p) * r))
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicPattern:
+    """A capacity-bounded family of access patterns, one member per batch.
+
+    ``template`` is any representative member: it fixes the static facts
+    every batch shares — accessor count ``m``, row width ``r``, vector
+    length ``n`` — and seeds the envelope plan the front doors resolve
+    against.  ``s_max`` is the envelope bound on per-pair unique counts;
+    the default (``envelope_s_max``) is always safe.  The per-batch index
+    table is supplied *traced*, inside the consumer's jit, to
+    ``derive_plan_args`` — never to the constructor.
+    """
+
+    template: AccessPattern
+    s_max: int
+
+    def __post_init__(self):
+        assert isinstance(self.template, AccessPattern), type(self.template)
+        assert self.s_max >= 1, self.s_max
+
+    @classmethod
+    def from_template(cls, template: AccessPattern, p: int,
+                      s_max: int | None = None) -> "DynamicPattern":
+        """Wrap a representative pattern; ``p`` (the comm-axis size) fixes
+        the envelope.  Pass ``s_max`` to tighten it when the workload
+        guarantees a smaller bound (e.g. expert capacity < shard size)."""
+        env = envelope_s_max(template.m, template.r, template.n, p)
+        if s_max is None:
+            s_max = env
+        assert 1 <= s_max <= env, (
+            f"s_max={s_max} must lie in [1, {env}] — above the envelope it "
+            "wastes padded volume for nothing, and a bound the routing can "
+            "exceed would silently drop table entries")
+        return cls(template=template, s_max=s_max)
+
+    # -- AccessPattern-shaped surface (the front doors read these) --
+    @property
+    def indices(self) -> np.ndarray:
+        return self.template.indices
+
+    @property
+    def n(self) -> int:
+        return self.template.n
+
+    @property
+    def m(self) -> int:
+        return self.template.m
+
+    @property
+    def r(self) -> int:
+        return self.template.r
+
+
+class DynamicGatherTables(NamedTuple):
+    """In-jit condensed gather tables (``CommPlan`` field names kept)."""
+
+    send_local_idx: jax.Array   # (P, P, s_max) int32, pad 0
+    recv_global_idx: jax.Array  # (P, P, s_max) int32, pad n (dump slot)
+    send_counts: jax.Array      # (P, P) int32; [src, dst]
+
+
+class DynamicScatterTables(NamedTuple):
+    """In-jit put-direction duals (``ScatterPlan`` field names kept)."""
+
+    cond_msg_idx: jax.Array     # (m, r) int32 into (P*s_max); owned -> dump
+    own_tgt_idx: jax.Array      # (m, r) int32 into own shard; foreign -> dump
+    win_mask: jax.Array         # (m, r) int8, reduce="set" winner slots
+    touched: jax.Array          # (P, shard_size) int8
+
+
+def derive_gather_tables(cols: jax.Array, n: int, p: int,
+                         s_max: int) -> DynamicGatherTables:
+    """The condensed tables of §4.3.1, as a fixed-shape XLA computation.
+
+    ``cols`` is the batch's (m, r) int32 global index table (replicated —
+    derivation runs *outside* the ``shard_map``, on tiny int32 data, and
+    the resulting global tables flow through the unchanged plan-arg
+    in_specs).  Bit-identical to ``build_comm_plan(cols, n, p,
+    s_max=s_max)``'s condensed arrays: per reader q and owner s, the sorted
+    unique foreign globals, padded to ``s_max`` with the dump conventions
+    (``recv`` pads to ``n``, ``send`` pads to 0).
+
+    One global sort per reader replaces the host's per-pair unique lists:
+    foreign globals sort ascending (own accesses keyed to ``n`` fall to the
+    end), first-occurrence masking dedups, and a per-owner segment rank
+    places each unique at ``(owner, rank)``.  Cost: O(m·r·log(m·r)) on
+    device — no host round-trip, no content hash.
+    """
+    cols = jnp.asarray(cols, jnp.int32)
+    if cols.ndim == 1:
+        cols = cols[:, None]
+    m = cols.shape[0]
+    assert n % p == 0 and m % p == 0, (n, m, p)
+    shard_size = n // p
+    rows_per_shard = m // p
+
+    def per_reader(q, cq):
+        flat = cq.ravel()
+        owner = flat // shard_size
+        foreign = owner != q
+        # own/padding keyed past every real global -> sorts to the tail
+        key = jnp.where(foreign, flat, jnp.int32(n))
+        skey = jnp.sort(key)
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), skey[1:] != skey[:-1]])
+        uniq = first & (skey < n)
+        sowner = jnp.clip(skey // shard_size, 0, p - 1)
+        per_owner = jax.ops.segment_sum(
+            uniq.astype(jnp.int32), sowner, num_segments=p)
+        start = jnp.cumsum(per_owner) - per_owner
+        rank = jnp.cumsum(uniq.astype(jnp.int32)) - 1 - start[sowner]
+        # envelope violations (rank >= s_max) drop into the dump slot
+        # rather than corrupting a neighbor segment
+        pos = jnp.where(uniq & (rank < s_max),
+                        sowner * s_max + rank, p * s_max)
+        recv = jnp.full((p * s_max + 1,), n, jnp.int32)
+        recv = recv.at[pos].set(skey, mode="drop")
+        return recv[:p * s_max].reshape(p, s_max), \
+            jnp.minimum(per_owner, s_max).astype(jnp.int32)
+
+    recv_global_idx, recv_counts = jax.vmap(per_reader)(
+        jnp.arange(p, dtype=jnp.int32),
+        cols.reshape(p, rows_per_shard, -1))
+    owner_base = (jnp.arange(p, dtype=jnp.int32)
+                  * shard_size)[None, :, None]
+    send_local_idx = jnp.where(
+        recv_global_idx != n, recv_global_idx - owner_base, 0
+    ).transpose(1, 0, 2).astype(jnp.int32)
+    return DynamicGatherTables(
+        send_local_idx=send_local_idx,
+        recv_global_idx=recv_global_idx,
+        send_counts=recv_counts.T,
+    )
+
+
+def derive_scatter_tables(cols: jax.Array, n: int, p: int, s_max: int,
+                          gather: DynamicGatherTables | None = None,
+                          ) -> DynamicScatterTables:
+    """The put-direction duals of ``derive_scatter_plan``, in-jit.
+
+    Pass the ``gather`` tables when both directions are derived from one
+    pattern (the fused dispatch→combine shape) — the shared sort is the
+    whole point of ``CommPlan.transpose()`` and is preserved here: the
+    scatter's message-slot positions are ``searchsorted`` probes into the
+    gather's already-sorted per-pair lists.  Bit-identical to the host
+    ``derive_scatter_plan`` on the matching envelope plan.
+    """
+    cols = jnp.asarray(cols, jnp.int32)
+    if cols.ndim == 1:
+        cols = cols[:, None]
+    m, r = cols.shape
+    shard_size = n // p
+    rows_per_shard = m // p
+    if gather is None:
+        gather = derive_gather_tables(cols, n, p, s_max)
+    recv = gather.recv_global_idx          # (P, P, s_max), rows sorted
+
+    def per_reader(q, cq, recv_q):
+        flat = cq.ravel()                   # (rows*r,)
+        owner = flat // shard_size
+        own = owner == q
+        # rank of each foreign target inside its (q <- owner) sorted unique
+        # list; rows pad with n > any target, so searchsorted lands exactly
+        rows = recv_q[jnp.clip(owner, 0, p - 1)]        # (rows*r, s_max)
+        pos = jax.vmap(jnp.searchsorted)(rows, flat)
+        cond = jnp.where(own, p * s_max, owner * s_max + pos)
+        own_tgt = jnp.where(own, flat - q * shard_size, shard_size)
+        return (cond.reshape(cq.shape).astype(jnp.int32),
+                own_tgt.reshape(cq.shape).astype(jnp.int32))
+
+    cond_msg_idx, own_tgt_idx = jax.vmap(per_reader)(
+        jnp.arange(p, dtype=jnp.int32),
+        cols.reshape(p, rows_per_shard, r), recv)
+
+    # reduce="set" winner: the last contribution in row-major accessor
+    # order, global across shards (duplicates may span senders)
+    flat_t = cols.ravel()
+    order = jnp.arange(m * r, dtype=jnp.int32)
+    last = jnp.full((n,), -1, jnp.int32).at[flat_t].max(order)
+    win_mask = (last[flat_t] == order).reshape(m, r).astype(jnp.int8)
+    touched = jnp.zeros((n,), jnp.int8).at[flat_t].set(1)
+
+    return DynamicScatterTables(
+        cond_msg_idx=cond_msg_idx.reshape(m, r),
+        own_tgt_idx=own_tgt_idx.reshape(m, r),
+        win_mask=win_mask,
+        touched=touched.reshape(p, shard_size),
+    )

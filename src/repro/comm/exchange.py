@@ -32,6 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.comm import plan_cache
 from repro.comm import select
 from repro.comm import strategies as strat
+from repro.comm.dynamic import DYNAMIC_STRATEGIES, DynamicPattern
 from repro.comm.pattern import AccessPattern
 from repro.comm.plan import CommPlan, Topology
 from repro.comm.shared import SharedVector, axis_size
@@ -145,6 +146,7 @@ class IrregularExchange:
         use_plan_cache: bool = True,
         base_plan: CommPlan | None = None,
         scan_steps: int | None = None,
+        plan_cost: float = 0.0,
     ):
         if isinstance(where, SharedVector):
             assert where.n == pattern.n, (where.n, pattern.n)
@@ -156,6 +158,30 @@ class IrregularExchange:
         valid = strat.STRATEGIES + ("auto",)
         if strategy not in valid:
             raise ValueError(f"strategy must be one of {valid}")
+        # a DynamicPattern duck-types the AccessPattern surface (indices /
+        # n / m / r come from its template) but switches plan resolution to
+        # the bucketed envelope tier and restricts the rung ladder to the
+        # strategies whose executor tables comm.dynamic can re-derive
+        # per batch in-jit
+        self.dynamic_pattern = (pattern if isinstance(pattern, DynamicPattern)
+                                else None)
+        if self.dynamic_pattern is not None:
+            if strategy == "auto":
+                if candidates is None:
+                    candidates = DYNAMIC_STRATEGIES
+                else:
+                    bad = tuple(c for c in candidates
+                                if c not in DYNAMIC_STRATEGIES)
+                    if bad:
+                        raise ValueError(
+                            f"candidates {bad} cannot serve a "
+                            f"DynamicPattern — device-side table "
+                            f"derivation covers {DYNAMIC_STRATEGIES}")
+            elif strategy not in DYNAMIC_STRATEGIES:
+                raise ValueError(
+                    f"strategy {strategy!r} cannot serve a DynamicPattern "
+                    f"— device-side table derivation covers "
+                    f"{DYNAMIC_STRATEGIES}")
         self.pattern = pattern
         self.mesh = mesh
         self.axis_name = axis_name
@@ -187,10 +213,22 @@ class IrregularExchange:
             # against it, and any direction- or consumer-specific delta (the
             # scatter executor tables, a Destination descriptor) is attached
             # only afterwards
-            base_plan = plan_cache.get_comm_plan(
-                pattern.indices, n, p, blocksize=blocksize, topology=topology,
-                cache=use_plan_cache,
-            )
+            if self.dynamic_pattern is not None:
+                # the bucketed-reuse tier: an envelope plan keyed on
+                # quantized pattern stats, shared across routings — its
+                # static geometry and pricing serve this exchange while the
+                # exact tables are (re-)derived from the template / each
+                # batch on device
+                base_plan = plan_cache.get_envelope_plan(
+                    pattern.indices, n, p, blocksize=blocksize,
+                    topology=topology, s_max=self.dynamic_pattern.s_max,
+                    cache=use_plan_cache,
+                )
+            else:
+                base_plan = plan_cache.get_comm_plan(
+                    pattern.indices, n, p, blocksize=blocksize,
+                    topology=topology, cache=use_plan_cache,
+                )
         self._use_plan_cache = use_plan_cache
         self._prepare(base_plan)
 
@@ -203,10 +241,15 @@ class IrregularExchange:
             # scan_steps (a ScanSchedule resolving this stage) prices the
             # rungs on the n-step steady-state loop cost — setup amortized
             # over the persistent window — instead of the single-call cost
+            # plan_cost (the §5 T_plan term for however this exchange
+            # obtains its tables) is a flat per-use addend — it never
+            # reorders the rungs but makes predicted_times comparable
+            # against wall clocks that include the plan acquisition
             ranked = select.rank_strategies(
                 self._ranking_plan(base_plan), pattern.r, hw,
                 candidates=candidates, direction=self.direction,
-                scan_steps=scan_steps, **self._price_kwargs())
+                scan_steps=scan_steps, plan_cost=plan_cost,
+                **self._price_kwargs())
             self.predicted_times = dict(ranked)
             strategy = ranked[0][0]
         self.strategy = strategy

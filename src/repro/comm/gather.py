@@ -58,6 +58,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comm import dynamic as dyn
 from repro.comm import plan_cache
 from repro.comm import strategies as strat
 from repro.comm.exchange import (IrregularExchange, OverlapHandle,
@@ -128,6 +129,11 @@ class IrregularGather(IrregularExchange):
     def _bind(self, base_plan: CommPlan, strategy: str) -> None:
         mesh, axis_name, p, n = self.mesh, self.axis_name, self.p, self.pattern.n
         destination = self._destination_arg
+        if self.dynamic_pattern is not None and destination is not None:
+            raise ValueError(
+                "Destination descriptors are host-precomputed per pattern "
+                "and cannot serve a DynamicPattern (whose tables change "
+                "every batch) — land with materialize='full' instead")
         if callable(destination):
             destination = destination(strategy, base_plan)
         if destination is not None:
@@ -149,10 +155,20 @@ class IrregularGather(IrregularExchange):
         shard = NamedSharding(mesh, P(axis_name))
         self.in_specs = strat.gather_in_specs(strategy, axis_name,
                                               with_dest=with_dest)
+        if self.dynamic_pattern is not None:
+            # on a bucket-reuse hit the envelope plan's index tables belong
+            # to the entry's founding routing, not this template — derive
+            # the template's own tables on device (bit-identical to a host
+            # build at the envelope s_max) so the static surface stays
+            # honest; per-batch consumers swap in derive_plan_args(cols)
+            g = dyn.derive_gather_tables(
+                self.pattern.indices, n, p, self.plan.s_max)
+            device_args = (g.send_local_idx, g.recv_global_idx)
+        else:
+            device_args = strat.plan_device_args(self.plan, strategy,
+                                                 with_dest=with_dest)
         self.plan_args = tuple(
-            jax.device_put(a, shard)
-            for a in strat.plan_device_args(self.plan, strategy,
-                                            with_dest=with_dest)
+            jax.device_put(a, shard) for a in device_args
         )
         self._start, self._finish = strat.make_start_local(
             self.plan, strategy, axis_name)
@@ -212,6 +228,32 @@ class IrregularGather(IrregularExchange):
             return out
 
         return OverlapHandle(x_local=x_local, _finish=finish)
+
+    # ---- dynamic surface (per-batch patterns, see repro.comm.dynamic) ----
+    def derive_plan_args(self, cols) -> tuple:
+        """Traced per-batch replacement for ``plan_args``.
+
+        ``cols`` is this batch's (m, r) int32 global index table — a traced
+        array inside the consumer's jit (replicated; derivation runs
+        *outside* the ``shard_map``).  Returns the condensed/overlap
+        executor tables ``(send_local_idx, recv_global_idx)`` computed on
+        device, bit-identical to a host plan build at the envelope
+        ``s_max``; feed them through the unchanged ``in_specs`` in place of
+        the static ``plan_args``.  No host round-trip, no plan-cache probe
+        — the caller records ``telemetry.record("device-derive")`` once per
+        *call* (not here: this body runs once per trace).
+        """
+        if self.strategy not in dyn.DYNAMIC_STRATEGIES:
+            raise ValueError(
+                f"derive_plan_args serves {dyn.DYNAMIC_STRATEGIES} "
+                f"executor tables, not {self.strategy!r}")
+        if self.destination is not None:
+            raise ValueError(
+                "derive_plan_args cannot rebuild host-precomputed "
+                "Destination arrays")
+        g = dyn.derive_gather_tables(cols, self.plan.n, self.p,
+                                     self.plan.s_max)
+        return (g.send_local_idx, g.recv_global_idx)
 
     # ---- standalone surface ----
     def __call__(self, x: jax.Array) -> jax.Array:

@@ -26,6 +26,11 @@ class AccessPattern:
     owns vector slice [q*n/p, (q+1)*n/p) and accessor rows
     [q*m/p, (q+1)*m/p).  Rows needing fewer than r indices pad with an
     *owned* index (e.g. the row's own element) — owned accesses cost nothing.
+
+    When the index set *changes every batch* (per-batch MoE routing), wrap
+    one representative pattern in ``repro.comm.dynamic.DynamicPattern``:
+    the front doors then take a capacity-bounded envelope plan and
+    re-derive the executor tables in-jit per batch, no host round-trip.
     """
 
     indices: np.ndarray

@@ -535,6 +535,7 @@ def build_comm_plan(
     blocksize: int | None = None,
     topology: Topology | None = None,
     destination=None,
+    s_max: int | None = None,
 ) -> CommPlan:
     """One-time preparation step (paper §4.3.1).
 
@@ -543,6 +544,13 @@ def build_comm_plan(
     ``[q*shard_size, (q+1)*shard_size)``; accessor rows likewise: shard q owns
     rows ``[q*rows_per_shard, (q+1)*rows_per_shard)``.  ``m == n`` for
     SpMV-like patterns where every element is also an accessor.
+
+    ``s_max`` widens the condensed padding to an *envelope* bound (≥ the
+    pattern's natural per-pair maximum).  Every routing with the same shape
+    then shares one executor-table geometry, which is what lets
+    ``comm.dynamic`` swap per-batch device-derived tables into a cached
+    envelope plan and what ``plan_cache.get_envelope_plan`` keys on.  The
+    padded volume grows accordingly and is priced by ``counts.padded_*``.
     """
     assert n % p == 0, f"n={n} must divide into p={p} shards (pad upstream)"
     shard_size = n // p
@@ -599,7 +607,12 @@ def build_comm_plan(
     for q in range(p):
         for s in range(p):
             send_counts[s, q] = len(need[q][s])
-    s_max = max(1, int(send_counts.max()))
+    natural_s_max = max(1, int(send_counts.max()))
+    if s_max is None:
+        s_max = natural_s_max
+    assert s_max >= natural_s_max, (
+        f"envelope s_max={s_max} is below the pattern's per-pair maximum "
+        f"{natural_s_max}; widening-only (entries would be dropped)")
 
     send_local_idx = np.zeros((p, p, s_max), np.int32)
     recv_global_idx = np.full((p, p, s_max), n, np.int32)  # dump slot = n

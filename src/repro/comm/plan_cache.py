@@ -25,21 +25,25 @@ partitionings cannot silently fill the user's disk; entries are written with
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import hashlib
 import os
 import tempfile
 import threading
+import time
 import warnings
 
 import numpy as np
 
+from repro.comm import telemetry
 from repro.comm.plan import (CommPlan, GatherCounts, ScatterPlan, Topology,
                              attach_destination, build_comm_plan,
                              derive_scatter_plan)
 
 __all__ = ["plan_key", "get_comm_plan", "get_scatter_plan",
-           "clear_memory_cache", "stats", "CacheStats", "cache_dir",
+           "get_envelope_plan", "envelope_plan_key", "clear_memory_cache",
+           "stats", "CacheStats", "isolated", "cache_dir",
            "StalePlanCacheError"]
 
 # Bump when the CommPlan field set/serialization changes OR when
@@ -51,7 +55,13 @@ __all__ = ["plan_key", "get_comm_plan", "get_scatter_plan",
 #     ``dest_*``); the destination content participates in the key.
 # v4: transpose-derived scatter (put-direction) executor tables, stored as
 #     O(m*r) delta entries referencing the direction-agnostic base plan.
-_FORMAT_VERSION = 4
+# v5: bucketed envelope-plan reuse for dynamic (per-batch) patterns —
+#     ``get_envelope_plan`` entries are keyed on *quantized pattern stats*
+#     (per-destination unique counts rounded up to bucket boundaries) plus
+#     the envelope ``s_max``, never on the exact index bytes, so a
+#     compatible cached envelope is reused across routings with a cheap
+#     in-window permutation (the device-derived tables of ``comm.dynamic``).
+_FORMAT_VERSION = 5
 
 # fields serialized verbatim as arrays
 _PLAN_ARRAYS = ("send_counts", "send_local_idx", "recv_global_idx",
@@ -80,15 +90,20 @@ _COUNT_SCALARS = ("blocksize", "padded_condensed_per_shard",
                   "padded_blockwise_per_shard")
 
 
+_STAT_FIELDS = ("memory_hits", "disk_hits", "misses", "derives", "evictions")
+
+
 @dataclasses.dataclass
 class CacheStats:
     memory_hits: int = 0
     disk_hits: int = 0
     misses: int = 0     # full O(nnz) plan builds performed
     derives: int = 0    # scatter-delta derivations performed
+    evictions: int = 0  # stale legacy-format entries deleted from disk
 
     def reset(self) -> None:
-        self.memory_hits = self.disk_hits = self.misses = self.derives = 0
+        for field in _STAT_FIELDS:
+            setattr(self, field, 0)
 
     def bump(self, field: str) -> None:
         """Increment one counter under the cache lock — a bare ``+= 1``
@@ -96,12 +111,42 @@ class CacheStats:
         with _memory_lock:
             setattr(self, field, getattr(self, field) + 1)
 
+    def snapshot(self) -> dict:
+        """A detached copy of every counter — safe to compare later.
+
+        >>> s = CacheStats(misses=2, evictions=1)
+        >>> snap = s.snapshot()
+        >>> snap["misses"], snap["evictions"], snap["hits"]
+        (2, 1, 0)
+        """
+        with _memory_lock:
+            out = {field: getattr(self, field) for field in _STAT_FIELDS}
+        out["hits"] = out["memory_hits"] + out["disk_hits"]
+        return out
+
     @property
     def hits(self) -> int:
         return self.memory_hits + self.disk_hits
 
 
 stats = CacheStats()
+
+
+@contextlib.contextmanager
+def isolated():
+    """Capture-safe scope: a fresh ``CacheStats`` becomes the module global
+    for the duration and the previous one is restored after — tests observe
+    their own counters without mutating (or racing on) the process-wide
+    ``stats``.  The plan caches themselves are untouched; pair with
+    ``clear_memory_cache()`` / ``REPRO_PLAN_CACHE_DIR`` for full isolation.
+    """
+    global stats
+    prev = stats
+    stats = CacheStats()
+    try:
+        yield stats
+    finally:
+        stats = prev
 # LRU-bounded: long-lived processes sweeping many matrices must not retain
 # every plan ever built (large partitionings are hundreds of MB each).
 # Every access goes through _memory_get/_memory_put/clear_memory_cache
@@ -188,15 +233,16 @@ def plan_key(
 # version prefix participated in the content key, so a newer build would
 # otherwise never open them and the orphans would silently count against
 # REPRO_PLAN_CACHE_MAX_BYTES forever.
-_LEGACY_VERSIONS = (2, 3)
+_LEGACY_VERSIONS = (2, 3, 4)
 
 
 def _evict_stale_entries(cols, n, p, blocksize, topology) -> None:
-    """Surface + remove pre-v3 entries for this exact plan input.
+    """Surface + remove pre-v5 entries for this exact plan input.
 
-    A v2-era build stored this plan under the v2-prefixed content key;
+    An older build stored this plan under its version-prefixed content key;
     probe those filenames so a genuine upgrade gets the explicit migration
-    warning and the stale file is deleted rather than orphaned.
+    warning and the stale file is deleted rather than orphaned.  Each
+    deletion is recorded in ``stats.evictions``.
     """
     for old in _LEGACY_VERSIONS:
         path = _disk_path(_key_for_version(old, cols, n, p, blocksize,
@@ -205,11 +251,12 @@ def _evict_stale_entries(cols, n, p, blocksize, topology) -> None:
             warnings.warn(
                 f"plan-cache entry {os.path.basename(path)} was written by "
                 f"a v{old}-format build; this build reads "
-                f"v{_FORMAT_VERSION} (v4 added the transpose-derived "
-                "scatter executor tables) — the stale entry is deleted and "
-                "the plan rebuilt", stacklevel=3)
+                f"v{_FORMAT_VERSION} (v5 added bucketed envelope-plan "
+                "reuse for dynamic patterns) — the stale entry is deleted "
+                "and the plan rebuilt", stacklevel=3)
             try:
                 os.unlink(path)
+                stats.bump("evictions")
             except OSError:
                 pass
 
@@ -248,9 +295,9 @@ def _check_version(meta) -> None:
     if found != _FORMAT_VERSION:
         raise StalePlanCacheError(
             f"plan-cache entry has format v{found} but this build reads "
-            f"v{_FORMAT_VERSION} (v4 added the transpose-derived scatter "
-            f"executor tables); the entry is ignored and the plan rebuilt "
-            f"— delete {cache_dir()} to clear stale entries")
+            f"v{_FORMAT_VERSION} (v5 added bucketed envelope-plan reuse "
+            f"for dynamic patterns); the entry is ignored and the plan "
+            f"rebuilt — delete {cache_dir()} to clear stale entries")
 
 
 def _deserialize(data) -> CommPlan:
@@ -391,23 +438,29 @@ def get_comm_plan(
         if destination is not None and base is not None:
             return attach_destination(base, destination)
         stats.bump("misses")
-        return build_comm_plan(cols, n, p, blocksize=blocksize,
+        t0 = time.perf_counter()
+        plan = build_comm_plan(cols, n, p, blocksize=blocksize,
                                topology=topology, destination=destination)
+        telemetry.record("host-build", time.perf_counter() - t0)
+        return plan
 
     key = plan_key(cols, n, p, bs, topo, destination)
     plan = _memory_get(key)
     if isinstance(plan, CommPlan):
         stats.bump("memory_hits")
+        telemetry.record("memory-hit")
         return plan
     plan = _load_disk(key)
     if plan is not None:
         stats.bump("disk_hits")
+        telemetry.record("disk-hit")
         _memory_put(key, plan)
         return plan
 
     if destination is not None:
         # the O(nnz) part is destination-independent: reuse (and populate)
         # the base entry, then attach the cheap O(L) destination arrays
+        # (the base lookup records its own telemetry event)
         if base is None:
             base = get_comm_plan(cols, n, p, blocksize=blocksize,
                                  topology=topology, cache=cache)
@@ -417,8 +470,10 @@ def get_comm_plan(
     else:
         _evict_stale_entries(cols, n, p, bs, topo)
         stats.bump("misses")
+        t0 = time.perf_counter()
         plan = build_comm_plan(cols, n, p, blocksize=blocksize,
                                topology=topology)
+        telemetry.record("host-build", time.perf_counter() - t0)
         _memory_put(key, plan)
         _store_disk(key, plan)
     return plan
@@ -449,19 +504,26 @@ def get_scatter_plan(
     if not (cache and _enabled()):
         if base is None:
             stats.bump("misses")
+            t0 = time.perf_counter()
             base = build_comm_plan(cols, n, p, blocksize=blocksize,
                                    topology=topology)
+            telemetry.record("host-build", time.perf_counter() - t0)
         stats.bump("derives")
-        return derive_scatter_plan(base)
+        t0 = time.perf_counter()
+        splan = derive_scatter_plan(base)
+        telemetry.record("host-build", time.perf_counter() - t0)
+        return splan
 
     key = plan_key(cols, n, p, bs, topo, scatter=True)
     splan = _memory_get(key)
     if isinstance(splan, ScatterPlan):
         stats.bump("memory_hits")
+        telemetry.record("memory-hit")
         return splan
     splan = _load_disk(key)
     if splan is not None:
         stats.bump("disk_hits")
+        telemetry.record("disk-hit")
         _memory_put(key, splan)
         return splan
 
@@ -469,8 +531,127 @@ def get_scatter_plan(
         base = get_comm_plan(cols, n, p, blocksize=blocksize,
                              topology=topology, cache=cache)
     stats.bump("derives")
+    t0 = time.perf_counter()
     splan = derive_scatter_plan(base)
+    telemetry.record("host-build", time.perf_counter() - t0)
     _memory_put(key, splan)
     _store_disk_data(key, _serialize_scatter(
         splan, base_key=plan_key(cols, n, p, bs, topo)))
     return splan
+
+
+def _quantized_pattern_stats(
+    cols: np.ndarray, n: int, p: int, bucket: int,
+) -> np.ndarray:
+    """Per-(reader, owner) unique foreign counts, rounded UP to ``bucket``
+    multiples — the shape-stable fingerprint two routings share when one's
+    envelope plan can stand in for the other's."""
+    cols = np.asarray(cols)
+    if cols.ndim == 1:
+        cols = cols[:, None]
+    m = cols.shape[0]
+    shard_size = n // p
+    rows_per_shard = m // p
+    counts = np.zeros((p, p), np.int64)
+    for q in range(p):
+        cq = cols[q * rows_per_shard:(q + 1) * rows_per_shard].ravel()
+        uniq = np.unique(cq[(cq // shard_size) != q])
+        counts[q] = np.bincount(uniq // shard_size, minlength=p)
+    return (-(-counts // bucket) * bucket).astype(np.int64)
+
+
+def envelope_plan_key(
+    cols: np.ndarray, n: int, p: int, blocksize: int, topology: Topology,
+    s_max: int, bucket: int = 8,
+) -> str:
+    """Content key of the bucketed-reuse tier (format v5).
+
+    Unlike ``plan_key`` this never hashes the index bytes: two routings of
+    the same shape whose quantized per-destination unique counts round to
+    the same bucket boundaries — and that share the envelope ``s_max`` —
+    map to the same entry, so the second one reuses the first's envelope
+    plan instead of paying a host rebuild.
+    """
+    cols = np.asarray(cols)
+    if cols.ndim == 1:
+        cols = cols[:, None]
+    quant = _quantized_pattern_stats(cols, n, p, bucket)
+    h = hashlib.sha256()
+    h.update(f"env|v{_FORMAT_VERSION}|{n}|{p}|{cols.shape}|{blocksize}|"
+             f"{topology.num_shards}|{topology.shards_per_node}|"
+             f"{s_max}|{bucket}".encode())
+    h.update(np.ascontiguousarray(quant).tobytes())
+    return h.hexdigest()
+
+
+def get_envelope_plan(
+    cols: np.ndarray,
+    n: int,
+    p: int,
+    *,
+    blocksize: int | None = None,
+    topology: Topology | None = None,
+    s_max: int | None = None,
+    bucket: int = 8,
+    cache: bool = True,
+) -> CommPlan:
+    """The bucketed-reuse tier: a capacity-padded plan shared across routings.
+
+    Builds (or reuses) a ``build_comm_plan(..., s_max=s_max)`` *envelope*
+    plan keyed on ``envelope_plan_key`` — quantized pattern stats, never the
+    exact index bytes.  A hit means a compatible envelope already exists:
+    its static geometry (``s_max`` padding, in_specs shapes) and §5 pricing
+    (volumes correct to within one bucket per pair) stand in for this
+    routing's, and the *exact* executor tables come from the cheap in-window
+    permutation — ``comm.dynamic.derive_gather_tables`` /
+    ``derive_scatter_tables`` evaluated on the batch's indices inside the
+    consumer's jit.  The hit is recorded as ``bucket-reuse`` telemetry; a
+    miss pays (and records) one ``host-build``.
+
+    The returned plan's index tables correspond to the entry's *founding*
+    routing, not necessarily ``cols`` — callers on the dynamic path must
+    override them with device-derived tables and must not read
+    ``send_local_idx`` / ``recv_global_idx`` et al. as this batch's truth.
+    ``s_max`` defaults to the shape's envelope bound
+    (``dynamic.envelope_s_max``), which every same-shaped routing satisfies.
+    """
+    from repro.comm.dynamic import envelope_s_max
+
+    cols = np.asarray(cols)
+    if cols.ndim == 1:
+        cols = cols[:, None]
+    m, r = cols.shape
+    shard_size = n // p
+    bs = shard_size if blocksize is None else blocksize
+    topo = topology if topology is not None else Topology(p, p)
+    if s_max is None:
+        s_max = envelope_s_max(m, r, n, p)
+
+    def _build() -> CommPlan:
+        stats.bump("misses")
+        t0 = time.perf_counter()
+        plan = build_comm_plan(cols, n, p, blocksize=blocksize,
+                               topology=topology, s_max=s_max)
+        telemetry.record("host-build", time.perf_counter() - t0)
+        return plan
+
+    if not (cache and _enabled()):
+        return _build()
+
+    key = envelope_plan_key(cols, n, p, bs, topo, s_max, bucket)
+    plan = _memory_get(key)
+    if isinstance(plan, CommPlan):
+        stats.bump("memory_hits")
+        telemetry.record("bucket-reuse")
+        return plan
+    plan = _load_disk(key)
+    if plan is not None:
+        stats.bump("disk_hits")
+        telemetry.record("bucket-reuse")
+        _memory_put(key, plan)
+        return plan
+
+    plan = _build()
+    _memory_put(key, plan)
+    _store_disk(key, plan)
+    return plan

@@ -51,13 +51,15 @@ import dataclasses
 from typing import Callable
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comm import dynamic as dyn
 from repro.comm import plan_cache
 from repro.comm import strategies as strat
 from repro.comm.exchange import IrregularExchange
-from repro.comm.plan import CommPlan, ScatterPlan
+from repro.comm.plan import CommPlan, ScatterPlan, transpose_counts
 
 __all__ = ["IrregularScatter", "ScatterHandle"]
 
@@ -103,7 +105,32 @@ class IrregularScatter(IrregularExchange):
         # the transpose-derived executor tables are strategy-independent,
         # so they are resolved (and cached as a v4 delta) before the §5
         # ranking, whose put-direction counts they carry
-        self.splan: ScatterPlan = plan_cache.get_scatter_plan(
+        if self.dynamic_pattern is not None:
+            # the envelope base plan's tables may belong to a different
+            # founding routing (bucket reuse), so the host transpose-derive
+            # cannot probe them — derive the template's put tables on
+            # device instead (bit-identical to the host derivation at the
+            # envelope s_max); blockwise is outside the dynamic ladder, its
+            # table stays all-dump
+            cols = np.asarray(self.pattern.indices)
+            n, p, s_max = base_plan.n, base_plan.p, base_plan.s_max
+            g = dyn.derive_gather_tables(cols, n, p, s_max)
+            s = dyn.derive_scatter_tables(cols, n, p, s_max, gather=g)
+            m, r = cols.shape
+            dump_blk = base_plan.p * base_plan.b_max * base_plan.blocksize
+            self._dyn_send_local_idx = np.asarray(g.send_local_idx)
+            self.splan = ScatterPlan(
+                base=base_plan,
+                tgt_global=cols.astype(np.int32),
+                cond_msg_idx=np.asarray(s.cond_msg_idx),
+                blk_msg_idx=np.full((m, r), dump_blk, np.int32),
+                own_tgt_idx=np.asarray(s.own_tgt_idx),
+                win_mask=np.asarray(s.win_mask),
+                touched=np.asarray(s.touched),
+                counts=transpose_counts(base_plan),
+            )
+            return
+        self.splan = plan_cache.get_scatter_plan(
             self.pattern.indices, base_plan.n, base_plan.p,
             blocksize=base_plan.blocksize, topology=base_plan.topology,
             base=base_plan, cache=self._use_plan_cache,
@@ -119,9 +146,17 @@ class IrregularScatter(IrregularExchange):
 
         shard = NamedSharding(mesh, P(axis_name))
         self.in_specs = strat.scatter_in_specs(strategy, axis_name)
+        if self.dynamic_pattern is not None:
+            # same substitution as the gather: the envelope base plan's
+            # accumulate-unpack table may belong to a different founding
+            # routing, so the static surface carries the template's own
+            # device-derived table (the other four came from _prepare)
+            device_args = (splan.cond_msg_idx, self._dyn_send_local_idx,
+                           splan.own_tgt_idx, splan.win_mask, splan.touched)
+        else:
+            device_args = strat.scatter_plan_device_args(splan, strategy)
         self.plan_args = tuple(
-            jax.device_put(a, shard)
-            for a in strat.scatter_plan_device_args(splan, strategy)
+            jax.device_put(a, shard) for a in device_args
         )
         self._start, self._finish = strat.make_scatter_start_local(
             splan, strategy, axis_name, self.reduce)
@@ -158,6 +193,31 @@ class IrregularScatter(IrregularExchange):
             return self._finish(in_flight, vals_local, *plan_args)
 
         return ScatterHandle(vals_local=vals_local, _finish=finish)
+
+    # ---- dynamic surface (per-batch patterns, see repro.comm.dynamic) ----
+    def derive_plan_args(self, cols, gather_tables=None) -> tuple:
+        """Traced per-batch replacement for ``plan_args``.
+
+        ``cols`` is this batch's (m, r) int32 target table — traced inside
+        the consumer's jit.  Pass ``gather_tables`` (the
+        ``DynamicGatherTables`` a sibling gather of the same pattern
+        already derived) to share the one sort between both directions —
+        the ``CommPlan.transpose()`` economy, in-jit.  Returns the five
+        condensed/overlap executor tables in ``in_specs`` order.  The
+        caller records ``telemetry.record("device-derive")`` once per call
+        (not here: this body runs once per trace).
+        """
+        if self.strategy not in dyn.DYNAMIC_STRATEGIES:
+            raise ValueError(
+                f"derive_plan_args serves {dyn.DYNAMIC_STRATEGIES} "
+                f"executor tables, not {self.strategy!r}")
+        n, p, s_max = self.plan.n, self.p, self.plan.s_max
+        g = gather_tables
+        if g is None:
+            g = dyn.derive_gather_tables(cols, n, p, s_max)
+        s = dyn.derive_scatter_tables(cols, n, p, s_max, gather=g)
+        return (s.cond_msg_idx, g.send_local_idx, s.own_tgt_idx,
+                s.win_mask, s.touched)
 
     # ---- standalone surface ----
     def shard_values(self, vals) -> jax.Array:

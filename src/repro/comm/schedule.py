@@ -87,6 +87,18 @@ from repro.comm.shared import axis_size
 __all__ = ["Schedule", "ExchangeSchedule", "ScanSchedule", "StageRef"]
 
 
+def _unwrap_dynamic(pattern) -> AccessPattern:
+    """Schedules resolve stages against host plans, so a ``DynamicPattern``
+    degrades to its template here (a documented limitation: per-batch
+    device-derived tables inside a compiled schedule need the consumer to
+    thread ``derive_plan_args`` output through its own shard_map — see
+    ``models.moe.DynamicMoELayer`` for the fused pattern done by hand)."""
+    from repro.comm.dynamic import DynamicPattern
+    if isinstance(pattern, DynamicPattern):
+        return pattern.template
+    return pattern
+
+
 @dataclasses.dataclass(frozen=True)
 class StageRef:
     """Symbolic handle to one stage's output inside a ``Schedule``."""
@@ -226,6 +238,7 @@ class Schedule:
                 if src is None:
                     src = self.input()
         self._check_ref(src, array_valued=True)
+        pattern = _unwrap_dynamic(pattern)
         return self._add("gather", name, pattern=pattern, src=src,
                          destination=destination, dest_slots=dest_slots,
                          strategy=strategy, blocksize=blocksize,
@@ -282,6 +295,7 @@ class Schedule:
         self._check_ref(src, array_valued=True)
         if reduce not in strat.SCATTER_REDUCES:
             raise ValueError(f"reduce must be one of {strat.SCATTER_REDUCES}")
+        pattern = _unwrap_dynamic(pattern)
         return self._add("scatter", name, pattern=pattern, src=src,
                          reduce=reduce, strategy=strategy,
                          blocksize=blocksize)

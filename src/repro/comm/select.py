@@ -71,6 +71,7 @@ def rank_strategies(
     direction: str = "get",
     scan_steps: int | None = None,
     overlap_credit: float = 0.0,
+    plan_cost: float = 0.0,
 ) -> list[tuple[str, float]]:
     """[(strategy, predicted_seconds)] sorted fastest-first (§5 formulas).
 
@@ -93,6 +94,14 @@ def rank_strategies(
     ``strategy="auto"`` stages on.  Loop scaling is monotone per rung but
     NOT order-preserving across rungs: a rung that wins one call on cheap
     setup can lose the loop once setup amortizes away.
+
+    ``plan_cost`` is the §5 ``T_plan`` term (``perfmodel.plan_build_time``
+    priced for however this exchange obtains its executor tables): a flat
+    per-use addend applied AFTER any ``scan_steps`` loop scaling, because
+    a plan is (re)built once per use of the plan — once per loop, not once
+    per iteration.  It closes the "is replanning worth it this step?"
+    question: rank once with the rebuild's ``T_plan`` and once with the
+    reuse tier's, and compare (``perfmodel.replan_break_even_steps``).
     """
     pm = _perfmodel()
     if direction not in ("get", "put"):
@@ -108,6 +117,8 @@ def rank_strategies(
         ranked = [(name, pm.scan_loop_cost(t, setup, scan_steps,
                                            overlap_credit=overlap_credit))
                   for name, t in ranked]
+    if plan_cost:
+        ranked = [(name, t + float(plan_cost)) for name, t in ranked]
     ranked.sort(key=lambda kv: kv[1])
     return ranked
 

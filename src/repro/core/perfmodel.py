@@ -30,6 +30,7 @@ __all__ = [
     "predict_put_overlap", "predict_put_replicate", "predict_put_all",
     "PUT_STRATEGY_PREDICTORS", "predict_schedule", "window_setup_time",
     "scan_loop_cost", "predict_scan_schedule",
+    "PLAN_SOURCES", "plan_build_time", "replan_break_even_steps",
     "predict_heat2d", "Heat2DWorkload", "full_assembly_tax",
     "heat2d_edge_ring_comp", "predict_heat2d_window",
     "predict_heat2d_scan",
@@ -572,6 +573,74 @@ def predict_scan_schedule(stages, hw: HardwareParams, n_steps: int, *,
             "n_steps": int(n_steps),
             "overlap_credit": float(overlap_credit),
             "stages": win["stages"]}
+
+
+# --------------------------------------------------------------------------
+# T_plan: the plan-acquisition term (§5 extension for dynamic patterns).
+# The paper's models price only the executor — its one-time preparation
+# step (§4.3.1) amortizes to zero over ~1000 iterations of a static
+# pattern.  A per-batch pattern re-pays plan acquisition every use, so the
+# term re-enters the model: each tier of ``repro.comm.dynamic`` (the
+# telemetry's plan *sources*) has a closed form over the pattern's nnz =
+# m·r index entries, all streaming through private memory at w_private:
+#
+#   host-build    — the O(nnz) preparation: one read + one write of the
+#                   index set around an O(nnz log nnz) grouping sort.
+#   device-derive — the in-jit derivation: the same sort, but fused with
+#                   the table writes (no separate materialized pass).
+#   disk-hit      — decompress + copy the serialized tables: ~2 passes.
+#   bucket-reuse / memory-hit — hand over a resident pointer: ~1 pass
+#                   (the key hash still touches the quantized stats).
+#
+# Thread the result through ``select.rank_strategies(plan_cost=...)``:
+# it is a flat per-use addend, applied after any scan-loop scaling,
+# because a plan is acquired once per use — once per loop, not per step.
+# --------------------------------------------------------------------------
+
+# Ordered cheapest-first; mirrors ``repro.comm.telemetry.PLAN_SOURCES``.
+PLAN_SOURCES = ("memory-hit", "disk-hit", "bucket-reuse", "device-derive",
+                "host-build")
+
+
+def plan_build_time(m: int, r: int, hw: HardwareParams, *,
+                    source: str = "host-build") -> float:
+    """T_plan: seconds to obtain executor tables for an (m, r) pattern
+    via one plan ``source`` (a ``telemetry.PLAN_SOURCES`` name)."""
+    nnz = max(1, int(m) * int(r))
+    idx_bytes = nnz * hw.idx
+    log_term = max(1.0, np.log2(nnz))
+    if source == "host-build":
+        passes = 2.0 + log_term
+    elif source == "device-derive":
+        passes = log_term
+    elif source == "disk-hit":
+        passes = 2.0
+    elif source in ("bucket-reuse", "memory-hit"):
+        passes = 1.0
+    else:
+        raise ValueError(
+            f"unknown plan source {source!r}; expected one of {PLAN_SOURCES}")
+    return float(passes * idx_bytes / hw.w_private)
+
+
+def replan_break_even_steps(t_plan: float, t_stale: float,
+                            t_fresh: float) -> float:
+    """Steps over which a fresh plan pays back its T_plan.
+
+    A drifted pattern served by a stale (envelope/bucket) plan costs
+    ``t_stale`` per step; rebuilding costs ``t_plan`` once, then
+    ``t_fresh`` per step.  Replanning wins after::
+
+        n* = t_plan / (t_stale - t_fresh)
+
+    steps; ``inf`` when the stale plan is no slower (``t_stale <=
+    t_fresh`` — never replan).  This is the MD/neighbor-list regime:
+    lists drift slowly, so rebuild every ~n* steps and ride the stale
+    plan in between."""
+    gain = float(t_stale) - float(t_fresh)
+    if gain <= 0.0:
+        return float("inf")
+    return float(t_plan) / gain
 
 
 def _threads_of_node(topo: Topology, node: int) -> np.ndarray:

@@ -8,10 +8,11 @@ seeing every hit/miss — including the v4 scatter-delta derivations
 """
 from repro.comm.plan_cache import (  # noqa: F401
     CacheStats, StalePlanCacheError, cache_dir, clear_memory_cache,
-    get_comm_plan, get_scatter_plan, plan_key, stats, _disk_path,
-    _key_for_version, _memory,
+    envelope_plan_key, get_comm_plan, get_envelope_plan, get_scatter_plan,
+    plan_key, stats, _disk_path, _key_for_version, _memory,
 )
 
 __all__ = ["plan_key", "get_comm_plan", "get_scatter_plan",
+           "envelope_plan_key", "get_envelope_plan",
            "clear_memory_cache", "stats", "CacheStats",
            "StalePlanCacheError", "cache_dir"]

@@ -28,10 +28,33 @@ import numpy as np
 
 from repro.models.layers import init_linear
 
-__all__ = ["init_moe", "moe_fwd", "moe_capacity",
+__all__ = ["init_moe", "moe_fwd", "moe_capacity", "random_router",
            "moe_dispatch_pattern", "moe_dispatch_ref", "MoEDispatchGather",
            "moe_combine_weights", "moe_combine_ref", "MoECombineScatter",
-           "moe_expert_local", "MoELayer"]
+           "moe_expert_local", "MoELayer", "DynamicMoELayer"]
+
+
+def random_router(key, num_tokens: int, num_experts: int, top_e: int = 2):
+    """Seeded zipf-skewed routing, the shared stand-in for a trained router.
+
+    Expert popularity follows the paper-style skew real routers exhibit
+    (weights ∝ 1/rank): every benchmark and test that needs a routing draws
+    it here so the load imbalance — the thing the ladder optimizes — is the
+    same everywhere.  Per token the ``top_e`` experts are drawn *without
+    replacement* (Gumbel top-k over the skewed logits) and the routing
+    weights are normalized to sum to 1.
+
+    Returns ``(top_e_idx (T, k) int32, top_w (T, k) float32)``.
+    """
+    rng = np.random.default_rng(key)
+    weights = 1.0 / np.arange(1, num_experts + 1)
+    weights /= weights.sum()
+    # Gumbel top-k: k distinct experts per token with P(expert) ∝ weights
+    g = rng.gumbel(size=(num_tokens, num_experts)) + np.log(weights)
+    idx = np.argsort(-g, axis=1)[:, :top_e].astype(np.int32)
+    raw = rng.random((num_tokens, top_e)).astype(np.float32) + 0.1
+    top_w = raw / raw.sum(axis=1, keepdims=True)
+    return idx, top_w.astype(np.float32)
 
 
 def init_moe(key, cfg, dtype=jnp.float32):
@@ -573,3 +596,183 @@ class MoELayer:
         outputs, sharded — the full dispatch→expert→combine step in one
         fused window."""
         return self.schedule(x)
+
+
+# ---------------------------------------------------------------------------
+# Per-batch routing: the DynamicPattern consumer (repro.comm.dynamic)
+# ---------------------------------------------------------------------------
+
+
+class DynamicMoELayer:
+    """Per-batch routed dispatch → expert MLP → combine with ZERO host plan
+    builds after warmup.
+
+    ``MoELayer`` bakes one routing into its compiled window: a new routing
+    means a new host ``CommPlan`` build, a new trace, a new compile — the
+    §5 ``T_plan`` tax every batch.  ``DynamicMoELayer`` instead wraps one
+    representative routing in a ``DynamicPattern``: the plan cache serves a
+    capacity-bounded *envelope* plan (bucket-reused across compatible
+    routings, ``plan_cache.get_envelope_plan``), and each batch's executor
+    tables are re-derived **in-jit** from that batch's ``(top_e, top_w)``
+    (``repro.comm.dynamic``) — one derivation pass feeds BOTH directions,
+    the ``CommPlan.transpose()`` economy on device.  One jit serves every
+    routing of the same shape; after the first call the only per-batch plan
+    work is the traced derivation (telemetry source ``"device-derive"``).
+
+    The per-call cost the auto ranking pays for this is
+    ``perfmodel.plan_build_time(..., source="device-derive")``, threaded
+    through ``select.rank_strategies(plan_cost=...)`` — exposed as
+    ``.plan_time`` so consumers can ask ``replan_break_even_steps`` whether
+    rebuilding a static ``MoELayer`` would ever pay off.
+
+    Bit-identical to a freshly host-planned
+    ``MoEDispatchGather(materialize="full") → moe_expert_local →
+    MoECombineScatter`` per routing (tests/test_dynamic_pattern.py).
+
+    ``params``: the ``init_moe`` layout (``w1``/``w2``[/``w3``]), sharded
+    over the expert dim at construction.  ``top_e`` is a *template*
+    routing (T, k) — only its shape and load envelope matter.
+    """
+
+    def __init__(self, params, top_e, num_tokens: int, num_experts: int,
+                 capacity: int, mesh, *, axis_name: str = "data",
+                 act: str = "gelu", strategy: str = "auto", blocksize=None,
+                 shards_per_node=None, hw=None, use_plan_cache: bool = True,
+                 s_max: int | None = None):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
+        from repro.comm import dynamic as dyn
+        from repro.comm.exchange import measure_hw
+        from repro.comm.gather import IrregularGather
+        from repro.comm.pattern import AccessPattern
+        from repro.comm.plan import Topology
+        from repro.comm.scatter import IrregularScatter
+        from repro.core import perfmodel
+
+        p = int(mesh.shape[axis_name])
+        assert num_experts % p == 0 and num_tokens % p == 0
+        self.p = p
+        self.num_tokens = num_tokens
+        self.num_experts = num_experts
+        self.capacity = capacity
+        t_loc, e_loc = num_tokens // p, num_experts // p
+        d = params["w1"].shape[1]
+        k = np.asarray(top_e).shape[1]
+        self.k = k
+        m = num_experts * capacity
+
+        # the template routing founds the envelope plan; every later batch
+        # reuses it (memory/bucket tier) and re-derives tables on device
+        idx, _ = moe_dispatch_pattern(
+            top_e, num_tokens, num_experts, capacity, p)
+        template = AccessPattern.from_indices(idx, n=num_tokens)
+        self.pattern = dyn.DynamicPattern.from_template(
+            template, p, s_max=s_max)
+
+        if hw is None:
+            hw = measure_hw(mesh, axis_name)
+        # the per-batch T_plan this layer actually pays: the traced
+        # derivation sort, not a host build
+        self.plan_time = perfmodel.plan_build_time(
+            m, 1, hw, source="device-derive")
+        topo = Topology(p, shards_per_node or p)
+        gather = IrregularGather(
+            self.pattern, mesh, axis_name=axis_name, strategy=strategy,
+            blocksize=blocksize, topology=topo, hw=hw,
+            use_plan_cache=use_plan_cache, plan_cost=self.plan_time)
+        scatter = IrregularScatter(
+            self.pattern, mesh, axis_name=axis_name, strategy=strategy,
+            reduce="add", blocksize=blocksize, topology=topo, hw=hw,
+            use_plan_cache=use_plan_cache, plan_cost=self.plan_time)
+        self.gather, self.scatter = gather, scatter
+        self.strategies = {"dispatch": gather.strategy,
+                           "combine": scatter.strategy}
+        self.predicted_times = {"dispatch": gather.predicted_times,
+                                "combine": scatter.predicted_times}
+        self.requested_strategy = strategy
+
+        shard = NamedSharding(mesh, P(axis_name))
+        wlist = [np.asarray(params["w1"]), np.asarray(params["w2"])]
+        if act == "swiglu":
+            wlist.append(np.asarray(params["w3"]))
+        self._weights = tuple(jax.device_put(w, shard) for w in wlist)
+        # empty-slot pad: an owned token id per expert shard (zero-cost)
+        own_token = jnp.asarray(np.repeat(
+            np.arange(p, dtype=np.int32) * t_loc, e_loc * capacity))
+
+        n, e, c, t = num_tokens, num_experts, capacity, num_tokens
+        s_max_r = self.pattern.s_max
+
+        def pack(top_e_d, top_w_d):
+            # the in-jit twin of _pack_slots + moe_dispatch_pattern +
+            # moe_combine_weights: same stable sort, same capacity drop,
+            # same owned-token padding — bit-identical slot tables
+            flat_e = top_e_d.reshape(t * k).astype(jnp.int32)
+            flat_w = top_w_d.reshape(t * k)
+            sort_idx = jnp.argsort(flat_e)                    # stable
+            se = flat_e[sort_idx]
+            counts = jax.nn.one_hot(flat_e, e, dtype=jnp.int32).sum(axis=0)
+            seg_start = jnp.cumsum(counts) - counts
+            pos = jnp.arange(t * k) - seg_start[se]
+            keep = pos < c
+            dest = jnp.where(keep, se * c + pos, e * c)       # dump slot
+            tok = (sort_idx // k).astype(jnp.int32)
+            sw = flat_w[sort_idx].astype(jnp.float32)
+            valid = jnp.zeros((e * c + 1,), bool).at[dest].set(True)[:e * c]
+            slot_tok = jnp.zeros((e * c + 1,),
+                                 jnp.int32).at[dest].set(tok)[:e * c]
+            w_slot = jnp.zeros((e * c + 1,),
+                               jnp.float32).at[dest].set(sw)[:e * c]
+            cols = jnp.where(valid, slot_tok, own_token)
+            return cols, w_slot           # w_slot is 0 at invalid slots
+
+        ng, ns = len(gather.in_specs), len(scatter.in_specs)
+
+        def step_local(x_local, *args):
+            gargs = args[:ng]
+            sargs = args[ng:ng + ns]
+            cols_l, w_l = args[ng + ns], args[ng + ns + 1]
+            wx = args[ng + ns + 2:]
+            x_copy = gather.local(x_local, *gargs)
+            buf = x_copy[cols_l].reshape(e_loc, capacity, d)
+            w3_l = wx[2] if len(wx) == 3 else None
+            out = moe_expert_local(buf, wx[0], wx[1], w3_l, act)
+            flat = out.reshape(e_loc * capacity, 1, d)
+            contrib = flat * w_l.reshape(
+                e_loc * capacity, 1, 1).astype(flat.dtype)
+            return scatter.local(contrib, *sargs)
+
+        in_specs = ((P(axis_name),) + gather.in_specs + scatter.in_specs
+                    + (P(axis_name), P(axis_name))
+                    + (P(axis_name),) * len(self._weights))
+        mapped = compat.shard_map(
+            step_local, mesh=mesh, in_specs=in_specs,
+            out_specs=P(axis_name), check_vma=False)
+        weights_dev = self._weights
+
+        @jax.jit
+        def fwd(x, top_e_d, top_w_d):
+            cols, w_slot = pack(top_e_d, top_w_d)
+            cols2 = cols.reshape(-1, 1)
+            # ONE derivation pass serves both directions (the transpose
+            # economy, in-jit): the gather tables seed the scatter derive
+            g = dyn.derive_gather_tables(cols2, n, p, s_max_r)
+            gargs = (g.send_local_idx, g.recv_global_idx)
+            sargs = scatter.derive_plan_args(cols2, gather_tables=g)
+            return mapped(x, *gargs, *sargs, cols, w_slot, *weights_dev)
+
+        self._fwd = fwd
+
+    def shard_tokens(self, x) -> jax.Array:
+        return self.gather.shard_vector(x)
+
+    def __call__(self, x: jax.Array, top_e, top_w) -> jax.Array:
+        """One routed step: x (num_tokens, d) sharded + THIS batch's
+        routing (T, k) -> (num_tokens, d) combined expert outputs.
+
+        No host plan work happens here — the tables come from the traced
+        derivation (recorded per call as ``"device-derive"``; the trace
+        itself compiles once for all routings of this shape)."""
+        from repro.comm import telemetry
+        telemetry.record("device-derive")
+        return self._fwd(x, jnp.asarray(top_e), jnp.asarray(top_w))

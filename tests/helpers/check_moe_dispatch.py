@@ -18,7 +18,7 @@ import numpy as np
 from repro.comm import STRATEGIES
 from repro.core import tune
 from repro.models.moe import (MoEDispatchGather, moe_dispatch_pattern,
-                              moe_dispatch_ref)
+                              moe_dispatch_ref, random_router)
 
 
 def main():
@@ -29,9 +29,7 @@ def main():
     e_total, cap = 32, 80
     rng = np.random.default_rng(0)
     # skewed routing (zipf-ish) so experts differ in load, like real routers
-    weights = 1.0 / np.arange(1, e_total + 1)
-    weights /= weights.sum()
-    top_e = rng.choice(e_total, size=(n_tok, k), p=weights)
+    top_e, _ = random_router(0, n_tok, e_total, k)
     x = rng.standard_normal((n_tok, d)).astype(np.float32)
 
     idx, valid = moe_dispatch_pattern(top_e, n_tok, e_total, cap, p)

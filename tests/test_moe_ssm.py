@@ -64,6 +64,28 @@ def test_moe_capacity_drops_tokens():
     assert float(jnp.abs(got).sum()) < float(jnp.abs(want).sum())
 
 
+def test_random_router_seeded_and_skewed():
+    """The shared bench/test router: deterministic per key, distinct
+    experts per token, normalized weights, zipf-skewed expert popularity
+    (expert 0 is routed to far more often than the last expert)."""
+    n_tok, e, k = 512, 8, 2
+    top_e, top_w = M.random_router(7, n_tok, e, k)
+    te2, tw2 = M.random_router(7, n_tok, e, k)
+    np.testing.assert_array_equal(top_e, te2)        # same key -> same route
+    np.testing.assert_array_equal(top_w, tw2)
+    te3, _ = M.random_router(8, n_tok, e, k)
+    assert not np.array_equal(top_e, te3)            # different key differs
+    assert top_e.dtype == np.int32 and top_w.dtype == np.float32
+    assert top_e.shape == (n_tok, k) and top_w.shape == (n_tok, k)
+    assert top_e.min() >= 0 and top_e.max() < e
+    # top-k without replacement: a token never picks one expert twice
+    assert all(len(set(row)) == k for row in top_e)
+    np.testing.assert_allclose(top_w.sum(axis=1), 1.0, rtol=1e-6)
+    assert top_w.min() > 0.0
+    counts = np.bincount(top_e.ravel(), minlength=e)
+    assert counts[0] > 2 * counts[e - 1]             # zipf-ish skew
+
+
 def test_moe_aux_loss_balanced_router():
     cfg = _moe_cfg(e=4, k=2)
     p = M.init_moe(KEY, cfg)

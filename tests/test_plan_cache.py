@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.matrix import make_mesh_like_matrix
 from repro.core.plan import Topology, build_comm_plan
-from repro.core import plan_cache
+from repro.comm import plan_cache
 
 
 @pytest.fixture(autouse=True)
@@ -152,35 +152,38 @@ def test_destination_plans_round_trip_and_reuse_base():
     assert len({k0, k1, k2}) == 3
 
 
-@pytest.mark.parametrize("legacy", [2, 3])
+@pytest.mark.parametrize("legacy", [2, 3, 4])
 def test_legacy_cache_entry_rejected_with_clear_message(legacy):
-    """A genuine pre-v4 → v4 upgrade: the old build keyed its entries with
-    its own version prefix, so a v4 lookup must probe those filenames too,
+    """A genuine pre-v5 → v5 upgrade: the old build keyed its entries with
+    its own version prefix, so a v5 lookup must probe those filenames too,
     surface the explicit migration warning, delete the stale-format orphan
-    (it would otherwise count against the disk cap forever), and rebuild."""
+    (it would otherwise count against the disk cap forever), count the
+    eviction, and rebuild."""
     import os
 
     m, n, p, bs, topo = _case()
     plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
-    v4_path = plan_cache._disk_path(plan_cache.plan_key(m.cols, n, p, bs,
-                                                        topo))
+    cur_path = plan_cache._disk_path(plan_cache.plan_key(m.cols, n, p, bs,
+                                                         topo))
     # simulate the pre-upgrade cache: the entry lives under the legacy key
     old_path = plan_cache._disk_path(
         plan_cache._key_for_version(legacy, m.cols, n, p, bs, topo))
-    os.rename(v4_path, old_path)
+    os.rename(cur_path, old_path)
 
     plan_cache.clear_memory_cache()
-    with pytest.warns(UserWarning, match=f"v{legacy}.*v4"):
+    assert plan_cache.stats.evictions == 0
+    with pytest.warns(UserWarning, match=f"v{legacy}.*v5"):
         plan = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs,
                                         topology=topo)
     assert not os.path.exists(old_path)  # orphan evicted, not left behind
     assert plan_cache.stats.misses == 2  # stale entry -> rebuild
+    assert plan_cache.stats.evictions == 1  # ...and the unlink was counted
     fresh = build_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
     _assert_plans_equal(plan, fresh)
 
 
 def test_stale_format_meta_rejected_by_deserialize():
-    """Belt and braces: an entry whose meta says pre-v4 (however it got
+    """Belt and braces: an entry whose meta says pre-v5 (however it got
     under the current key) is refused with the migration message and
     rebuilt — never reinterpreted as a current-format plan."""
     m, n, p, bs, topo = _case()
@@ -189,17 +192,105 @@ def test_stale_format_meta_rejected_by_deserialize():
     with np.load(path) as data:
         entries = {k: data[k] for k in data.files}
     meta = entries["meta"].copy()
-    meta[0] = 3  # a v3-era entry: same field set, older format stamp
+    meta[0] = 4  # a v4-era entry: same field set, older format stamp
     entries["meta"] = meta
     np.savez_compressed(path, **entries)
 
     plan_cache.clear_memory_cache()
-    with pytest.warns(UserWarning, match="format v3.*v4"):
+    with pytest.warns(UserWarning, match="format v4.*v5"):
         plan = plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs,
                                         topology=topo)
     assert plan_cache.stats.misses == 2  # stale entry -> rebuild
     fresh = build_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
     _assert_plans_equal(plan, fresh)
+
+
+def test_cache_stats_snapshot_and_isolated():
+    """CacheStats is capture-safe: snapshot() detaches, isolated() swaps a
+    fresh module-global in and restores the old one (counts untouched)."""
+    m, n, p, bs, topo = _case()
+    plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+    before = plan_cache.stats.snapshot()
+    assert before["misses"] == 1 and before["evictions"] == 0
+    with plan_cache.isolated() as inner:
+        assert plan_cache.stats is inner
+        assert inner.misses == 0  # fresh counters inside the context
+        plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+        assert inner.memory_hits == 1 and inner.misses == 0
+    assert plan_cache.stats.snapshot() == before  # outer stats untouched
+    # snapshot is a detached copy, not a live view
+    plan_cache.get_comm_plan(m.cols, n, p, blocksize=bs, topology=topo)
+    assert before["memory_hits"] == 0
+
+
+def _envelope_case(seed=0, n=256, p=4, m_rows=128, r=2):
+    rng = np.random.default_rng(seed)
+    cols = rng.integers(0, n, size=(m_rows, r)).astype(np.int32)
+    return cols, n, p
+
+
+def test_envelope_plan_bucket_reuse_hits_and_misses():
+    """Two routings whose quantized per-(reader, owner) stats round up to
+    the same bucket boundaries share ONE envelope entry; a routing whose
+    load crosses a bucket boundary founds a new one."""
+    from repro.comm import telemetry
+
+    cols, n, p = _envelope_case(seed=0)
+    with telemetry.isolated() as tel:
+        p1 = plan_cache.get_envelope_plan(cols, n, p, blocksize=16,
+                                          s_max=n // p, bucket=n)
+        assert plan_cache.stats.misses == 1
+        assert tel.sources["host-build"] == 1
+        # a different routing, same envelope: bucket=n quantizes every
+        # per-pair count to the same ceiling -> reuse, no rebuild
+        cols2, _, _ = _envelope_case(seed=1)
+        p2 = plan_cache.get_envelope_plan(cols2, n, p, blocksize=16,
+                                          s_max=n // p, bucket=n)
+        assert plan_cache.stats.misses == 1
+        assert plan_cache.stats.memory_hits == 1
+        assert tel.sources["bucket-reuse"] == 1
+        assert p2 is p1  # the founding entry, verbatim
+        # the envelope geometry serves any routing it covers
+        assert p2.s_max == n // p
+
+        # fine buckets separate routings with different load envelopes
+        plan_cache.get_envelope_plan(cols, n, p, blocksize=16,
+                                     s_max=n // p, bucket=1)
+        assert plan_cache.stats.misses == 2
+        assert tel.sources["host-build"] == 2
+
+        # disk tier: evicting memory still avoids the host rebuild
+        plan_cache.clear_memory_cache()
+        p3 = plan_cache.get_envelope_plan(cols2, n, p, blocksize=16,
+                                          s_max=n // p, bucket=n)
+        assert plan_cache.stats.misses == 2
+        assert plan_cache.stats.disk_hits == 1
+        _assert_plans_equal(p3, p1)
+
+
+def test_envelope_plan_key_sensitivity():
+    """The envelope key quantizes the routing stats — identical routings
+    and bucket-equivalent routings collide (that is the point); different
+    geometry, s_max, or bucket granularity never do."""
+    cols, n, p = _envelope_case(seed=0)
+    topo = Topology(p, 2)
+    k0 = plan_cache.envelope_plan_key(cols, n, p, 16, topo, n // p, bucket=8)
+    assert k0 == plan_cache.envelope_plan_key(cols.copy(), n, p, 16, topo,
+                                              n // p, bucket=8)
+    assert k0 != plan_cache.envelope_plan_key(cols, n, p, 32, topo, n // p,
+                                              bucket=8)
+    assert k0 != plan_cache.envelope_plan_key(cols, n, p, 16, topo,
+                                              n // p // 2, bucket=8)
+    assert k0 != plan_cache.envelope_plan_key(cols, n, p, 16, topo, n // p,
+                                              bucket=4)
+    assert k0 != plan_cache.envelope_plan_key(cols, n, p, 16,
+                                              Topology(p, p), n // p,
+                                              bucket=8)
+    # a routing with a genuinely heavier per-pair load breaks the bucket
+    heavy = cols.copy()
+    heavy[: len(heavy) // 2] = 0  # pile half the reads onto owner 0
+    assert k0 != plan_cache.envelope_plan_key(heavy, n, p, 16, topo, n // p,
+                                              bucket=8)
 
 
 def _assert_scatter_plans_equal(a, b):
