@@ -12,7 +12,15 @@ per-PR trajectory.  Checked, per file:
   ``sources`` covering exactly the five ``PLAN_SOURCES``, per-source
   ``build_seconds``, and a ``total`` consistent with the source counts —
   with at least one hot-path acquisition recorded (the dynamic rows ran);
-* table3 must include the ``table3.dynamic.*`` rows.
+* table3 must include the ``table3.dynamic.*`` rows;
+* table5 must include the ``table5.scan.*`` rows (the persistent
+  scan-window loops — heat2d + CG — actually ran);
+* ``BENCH_matrix.json`` carries the per-cell ``cells`` records of the
+  config-driven benchmark matrix: workload/rung/dtype strings, a
+  positive-int mesh shape, non-negative measured/predicted/error numbers,
+  a positive ``budget``, a ``within_budget`` flag CONSISTENT with
+  ``model_error <= budget`` (the gate's verdict can't contradict its
+  inputs), and a ``plan_source`` drawn from ``PLAN_SOURCES``.
 
 Usage:  python -m benchmarks.check_bench_schema BENCH_table3.json ...
 Exits nonzero listing every violation found.
@@ -83,6 +91,48 @@ def check_telemetry(doc: dict, errors: list, path: str) -> None:
                       "cannot have run")
 
 
+def check_matrix_cells(doc: dict, errors: list, path: str) -> None:
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        errors.append(f"{path}: matrix must carry a non-empty 'cells' list")
+        return
+    for i, cell in enumerate(cells):
+        if not isinstance(cell, dict):
+            errors.append(f"{path}: cells[{i}] is not an object")
+            continue
+        for key in ("workload", "rung", "dtype", "resolved"):
+            if not isinstance(cell.get(key), str) or not cell.get(key):
+                errors.append(f"{path}: cells[{i}].{key} must be a non-empty "
+                              f"string, got {cell.get(key)!r}")
+        mesh = cell.get("mesh")
+        if (not isinstance(mesh, list) or not mesh
+                or not all(isinstance(a, int) and a > 0 for a in mesh)):
+            errors.append(f"{path}: cells[{i}].mesh must be a list of "
+                          f"positive ints, got {mesh!r}")
+        for key in ("measured_us", "predicted_us", "model_error"):
+            v = cell.get(key)
+            if not isinstance(v, (int, float)) or v < 0:
+                errors.append(f"{path}: cells[{i}].{key} must be a "
+                              f"non-negative number, got {v!r}")
+        budget = cell.get("budget")
+        if not isinstance(budget, (int, float)) or budget <= 0:
+            errors.append(f"{path}: cells[{i}].budget must be a positive "
+                          f"number, got {budget!r}")
+        within = cell.get("within_budget")
+        if not isinstance(within, bool):
+            errors.append(f"{path}: cells[{i}].within_budget must be a "
+                          f"boolean, got {within!r}")
+        elif (isinstance(budget, (int, float)) and budget > 0
+              and isinstance(cell.get("model_error"), (int, float))
+              and within != (cell["model_error"] <= budget)):
+            errors.append(f"{path}: cells[{i}].within_budget={within} "
+                          f"contradicts model_error={cell['model_error']} "
+                          f"vs budget={budget}")
+        if cell.get("plan_source") not in PLAN_SOURCES:
+            errors.append(f"{path}: cells[{i}].plan_source must be one of "
+                          f"{PLAN_SOURCES}, got {cell.get('plan_source')!r}")
+
+
 def check_file(path: str) -> list:
     errors: list = []
     try:
@@ -98,13 +148,19 @@ def check_file(path: str) -> list:
     if not isinstance(doc.get("smoke"), bool):
         errors.append(f"{path}: 'smoke' must be a boolean")
     check_rows(doc, errors, path)
+    names = {r.get("name", "") for r in doc.get("rows", [])
+             if isinstance(r, dict)}
     if bench == "table3":
         check_telemetry(doc, errors, path)
-        names = {r.get("name", "") for r in doc.get("rows", [])
-                 if isinstance(r, dict)}
         if not any(n.startswith("table3.dynamic.") for n in names):
             errors.append(f"{path}: missing table3.dynamic.* rows "
                           "(per-batch routed MoE bench)")
+    if bench == "table5":
+        if not any(n.startswith("table5.scan.") for n in names):
+            errors.append(f"{path}: missing table5.scan.* rows "
+                          "(persistent scan-window loops)")
+    if bench == "matrix":
+        check_matrix_cells(doc, errors, path)
     return errors
 
 

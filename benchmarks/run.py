@@ -7,6 +7,13 @@ with a single device (keeping plain ``python -m benchmarks.run`` working).
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run table3 roofline
   python -m benchmarks.run table3 --smoke            # CI-sized quick pass
+  python -m benchmarks.run matrix --smoke            # config-driven matrix
+
+``matrix`` runs the declarative mesh x rung x workload x dtype product
+from ``benchmarks/matrix.yaml`` (override with ``--config=PATH``), writes
+``BENCH_matrix.json`` itself, and makes the process exit non-zero when any
+cell's predicted-vs-measured drift exceeds its ``perfmodel.error_budget``
+— the standing model-error regression gate.
 """
 from __future__ import annotations
 
@@ -53,6 +60,10 @@ def main() -> None:
     from benchmarks import common, tables
 
     smoke = "--smoke" in sys.argv[1:]
+    config = None
+    for arg in sys.argv[1:]:
+        if arg.startswith("--config="):
+            config = arg.split("=", 1)[1]
     which = [a for a in sys.argv[1:] if not a.startswith("-")]
     all_benches = {
         "table2": tables.table2_privatization,
@@ -61,11 +72,19 @@ def main() -> None:
         "fig2": tables.fig2_volumes,
         "table5": tables.table5_heat2d,
         "roofline": tables.roofline_report,
+        "matrix": None,  # dispatched below: writes its own JSON + gates
     }
     if not which:
         which = list(all_benches)
     print("name,us_per_call,derived")
+    violations: list[str] = []
     for name in which:
+        if name == "matrix":
+            from benchmarks import matrix
+
+            violations.extend(matrix.matrix_bench(smoke=smoke,
+                                                  config=config))
+            continue
         fn = all_benches[name]
         common.drain_rows()
         if smoke and "smoke" in inspect.signature(fn).parameters:
@@ -74,6 +93,12 @@ def main() -> None:
             fn()
         if name in ("table3", "table5") and smoke:
             _write_bench_json(name, common.drain_rows(), smoke)
+    if violations:
+        print(f"# FAIL: {len(violations)} matrix cell(s) exceed their "
+              "model-error budget", file=sys.stderr)
+        for v in violations:
+            print(f"#   {v}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

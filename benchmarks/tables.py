@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import calibrate_host, csv_row, timeit
+from benchmarks.matrix import ladder_volume, measured_ladder
 from repro import compat
 from repro.core import perfmodel as pm
 from repro.core.heat2d import Heat2D
@@ -85,36 +86,23 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50, smoke=False):
                               long_range_frac=0.02, seed=1)
     x_host = np.random.default_rng(1).standard_normal(n).astype(np.float32)
     y_ref = spmv_ref_np(m, x_host)
-    results = {}
-    for strategy in ("replicate", "blockwise", "condensed", "overlap"):
+
+    from repro.comm import select
+    from repro.core import tune
+    hw = tune.measure_hardware(mesh, "data")
+
+    def build(strategy):
         eng = DistributedSpMV(m, mesh, strategy=strategy,
                               blocksize=n // 8 // 16, shards_per_node=4)
         x = eng.shard_vector(x_host)
         np.testing.assert_allclose(np.asarray(eng(x)), y_ref, rtol=2e-4,
                                    atol=2e-4)
-        t = timeit(eng, x, iters=iters)
-        results[strategy] = t
-        c = eng.counts
-        vol = {"replicate": 8 * n,
-               "blockwise": c.total_blockwise_volume()}.get(
-                   strategy, c.total_condensed_volume())
-        csv_row(f"table3.measured.{strategy}", t * 1e6, f"vol_elems={vol}")
+        return eng, (x,), eng
 
-    # the model's pick ("auto"): measured like the fixed rungs, plus the
-    # predicted ordering it was derived from
-    eng = DistributedSpMV(m, mesh, strategy="auto",
-                          blocksize=n // 8 // 16, shards_per_node=4)
-    x = eng.shard_vector(x_host)
-    np.testing.assert_allclose(np.asarray(eng(x)), y_ref, rtol=2e-4,
-                               atol=2e-4)
-    t = timeit(eng, x, iters=iters)
-    results["auto"] = t
-    order = ">".join(s for s, _ in sorted(eng.predicted_times.items(),
-                                          key=lambda kv: kv[1]))
-    best_fixed = min(results[s] for s in results if s != "auto")
-    csv_row("table3.measured.auto", t * 1e6,
-            f"resolved={eng.strategy} predicted_order={order} "
-            f"vs_best_fixed={t/best_fixed:.2f}x")
+    results = measured_ladder(
+        "table3.measured", build, iters=iters,
+        preds=lambda eng: select.rank_strategies(eng.plan, r_nz, hw),
+        vol_of=lambda eng, s: ladder_volume(eng.counts, s, 8, n))
 
     # modeled at paper scale with Abel parameters (prediction deliverable)
     print("# table3 model: Abel params, threads=16..1024 (seconds/1000 iters)")
@@ -204,35 +192,19 @@ def table3_moe_dispatch(n_tok=1 << 14, d=32, smoke=False, iters=50):
     # price with the host's measured parameters, feature width folded into
     # the element size (every moved "element" is one d-wide token vector)
     hw = tune.measure_hardware(mesh, "data").replace(elem=4 * d)
-    preds = None
-    results = {}
-    for strategy in ("replicate", "blockwise", "condensed", "overlap",
-                     "auto"):
+
+    def build(strategy):
         g = MoEDispatchGather(top_e, n_tok, e_total, cap, mesh,
                               strategy=strategy, blocksize=n_tok // 8 // 16,
                               shards_per_node=1, hw=hw)
-        if preds is None:
-            preds = dict(select.rank_strategies(g.plan, 1, hw))
         x = g.shard_tokens(x_host)
         np.testing.assert_array_equal(np.asarray(g(x)), ref)
-        t = timeit(g, x, iters=iters)
-        results[strategy] = t
-        if strategy == "auto":
-            best_fixed = min(v for s, v in results.items() if s != "auto")
-            csv_row("table3.moe_dispatch.auto", t * 1e6,
-                    f"resolved={g.strategy} "
-                    f"vs_best_fixed={t/best_fixed:.2f}x")
-        else:
-            t_pred = preds[strategy]
-            acc = min(t, t_pred) / max(t, t_pred)
-            c = g.counts
-            vol = {"replicate": 8 * n_tok,
-                   "blockwise": c.total_blockwise_volume()}.get(
-                       strategy, c.total_condensed_volume())
-            csv_row(f"table3.moe_dispatch.{strategy}", t * 1e6,
-                    f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
-                    f"vol_elems={vol}")
-    return results
+        return g, (x,), g
+
+    return measured_ladder(
+        "table3.moe_dispatch", build, iters=iters,
+        preds=lambda g: select.rank_strategies(g.plan, 1, hw),
+        vol_of=lambda g, s: ladder_volume(g.counts, s, 8, n_tok))
 
 
 # --------------------------------------------------------------------------
@@ -252,7 +224,6 @@ def table3_scatter(n=1 << 17, r_nz=16, smoke=False, iters=50):
     if smoke:
         n, iters = 1 << 14, 5
     mesh = _mesh8()
-    rungs = ("replicate", "blockwise", "condensed", "overlap")
 
     # -- spmv_transpose: y = (D + A)ᵀ x via scatter-accumulate --
     print(f"# table3 scatter: transposed SpMV (n={n}) + MoE combine on the "
@@ -262,39 +233,21 @@ def table3_scatter(n=1 << 17, r_nz=16, smoke=False, iters=50):
     x_host = np.random.default_rng(1).standard_normal(n).astype(np.float32)
     y_ref = spmv_t_ref_np(m, x_host)
     hw = tune.measure_hardware(mesh, "data")
-    results = {}
-    preds = None
-    for strategy in rungs + ("auto",):
+
+    def build_t(strategy):
         eng = DistributedSpMV(m, mesh, strategy=strategy,
                               blocksize=n // 8 // 16, shards_per_node=1,
                               transpose=True, hw=hw)
-        if preds is None:
-            preds = dict(select.rank_strategies(eng.splan, r_nz, hw,
-                                                direction="put"))
         x = eng.shard_vector(x_host)
         np.testing.assert_allclose(np.asarray(eng(x)), y_ref, rtol=2e-4,
                                    atol=2e-4)
-        t = timeit(eng, x, iters=iters)
-        results[strategy] = t
-        if strategy == "auto":
-            best_fixed = min(v for s, v in results.items() if s != "auto")
-            order = ">".join(s for s, _ in sorted(preds.items(),
-                                                  key=lambda kv: kv[1]))
-            agree = eng.strategy == min(preds, key=preds.get)
-            csv_row("table3.scatter.spmv_transpose.auto", t * 1e6,
-                    f"resolved={eng.strategy} predicted_order={order} "
-                    f"pick_agrees_with_model={agree} "
-                    f"vs_best_fixed={t/best_fixed:.2f}x")
-        else:
-            t_pred = preds[strategy]
-            acc = min(t, t_pred) / max(t, t_pred)
-            c = eng.counts
-            vol = {"replicate": 8 * n,
-                   "blockwise": c.total_blockwise_volume()}.get(
-                       strategy, c.total_condensed_volume())
-            csv_row(f"table3.scatter.spmv_transpose.{strategy}", t * 1e6,
-                    f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
-                    f"vol_elems={vol}")
+        return eng, (x,), eng
+
+    measured_ladder(
+        "table3.scatter.spmv_transpose", build_t, iters=iters,
+        preds=lambda eng: select.rank_strategies(eng.splan, r_nz, hw,
+                                                 direction="put"),
+        vol_of=lambda eng, s: ladder_volume(eng.counts, s, 8, n))
 
     # -- moe_combine: weighted expert→token return --
     n_tok, d = (1 << 12, 8) if smoke else (1 << 14, 32)
@@ -307,38 +260,21 @@ def table3_scatter(n=1 << 17, r_nz=16, smoke=False, iters=50):
     w_slot = moe_combine_weights(top_e, top_w, n_tok, e_total, cap)
     ref = moe_combine_ref(buf, idx, valid, w_slot, n_tok)
     hw_tok = hw.replace(elem=4 * d)  # every moved element is a d-wide row
-    results = {}
-    preds = None
-    for strategy in rungs + ("auto",):
+
+    def build_c(strategy):
         g = MoECombineScatter(top_e, top_w, n_tok, e_total, cap, mesh,
                               strategy=strategy, blocksize=n_tok // 8 // 16,
                               shards_per_node=1, hw=hw_tok)
-        if preds is None:
-            preds = dict(select.rank_strategies(g.splan, 1, hw_tok,
-                                                direction="put"))
         b = g.shard_expert_buf(buf)
         np.testing.assert_allclose(np.asarray(g(b)), ref, rtol=2e-4,
                                    atol=2e-4)
-        t = timeit(g, b, iters=iters)
-        results[strategy] = t
-        if strategy == "auto":
-            best_fixed = min(v for s, v in results.items() if s != "auto")
-            agree = g.strategy == min(preds, key=preds.get)
-            csv_row("table3.scatter.moe_combine.auto", t * 1e6,
-                    f"resolved={g.strategy} "
-                    f"pick_agrees_with_model={agree} "
-                    f"vs_best_fixed={t/best_fixed:.2f}x")
-        else:
-            t_pred = preds[strategy]
-            acc = min(t, t_pred) / max(t, t_pred)
-            c = g.counts
-            vol = {"replicate": 8 * n_tok,
-                   "blockwise": c.total_blockwise_volume()}.get(
-                       strategy, c.total_condensed_volume())
-            csv_row(f"table3.scatter.moe_combine.{strategy}", t * 1e6,
-                    f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
-                    f"vol_elems={vol}")
-    return results
+        return g, (b,), g
+
+    return measured_ladder(
+        "table3.scatter.moe_combine", build_c, iters=iters,
+        preds=lambda g: select.rank_strategies(g.splan, 1, hw_tok,
+                                               direction="put"),
+        vol_of=lambda g, s: ladder_volume(g.counts, s, 8, n_tok))
 
 
 # --------------------------------------------------------------------------

@@ -23,7 +23,7 @@ import numpy as np
 from repro.comm.plan import CommPlan, Topology, blockwise_block_counts
 
 __all__ = ["rank_strategies", "choose_strategy", "choose_blocksize",
-           "blocksize_candidates", "workload_from_plan"]
+           "blocksize_sweep", "blocksize_candidates", "workload_from_plan"]
 
 
 def _perfmodel():
@@ -156,7 +156,7 @@ def blocksize_candidates(shard_size: int, *, min_bs: int = 8) -> list[int]:
     return out
 
 
-def choose_blocksize(
+def blocksize_sweep(
     cols: np.ndarray,
     n: int,
     p: int,
@@ -165,14 +165,18 @@ def choose_blocksize(
     topology: Topology | None = None,
     hw=None,
     candidates=None,
-) -> int:
-    """Eq.-11-minimizing virtual block size for this access pattern.
+) -> list[tuple[int, float]]:
+    """The full eq.-11 BLOCKSIZE sweep: ``[(blocksize, seconds), ...]``.
 
     For each candidate BLOCKSIZE the UPCv2 model needs only the per-shard
     needed-block counts (B_local / B_remote) — counted directly from the
     index set without building a full plan per candidate.  Small blocks
     shrink the whole-block volume tax; large blocks amortize per-message
-    latency; eq. 11 prices both sides and the sweep picks the minimum.
+    latency; eq. 11 prices both sides.  Candidates that do not divide the
+    shard size are skipped; the list keeps candidate order so callers can
+    inspect the sweep's shape (the Fig. 4 curve — how sharply the optimum
+    is peaked tells you how much a skew-concentrated pattern punishes a
+    mis-sized block).  ``choose_blocksize`` is this sweep's argmin.
     """
     pm = _perfmodel()
     cols = np.asarray(cols)
@@ -189,7 +193,7 @@ def choose_blocksize(
     if candidates is None:
         candidates = blocksize_candidates(shard_size)
 
-    best_bs, best_t = None, np.inf
+    sweep: list[tuple[int, float]] = []
     for bs in candidates:
         if shard_size % bs:
             continue
@@ -204,8 +208,24 @@ def choose_blocksize(
         w = pm.SpmvWorkload(n=n, r_nz=r_nz, p=p, blocksize=bs,
                             topology=topology, counts=counts,
                             m=cols.shape[0])
-        t = float(pm.predict_v2(w, hw))
-        if t < best_t:
-            best_bs, best_t = bs, t
-    assert best_bs is not None, "no candidate divides the shard size"
-    return best_bs
+        sweep.append((int(bs), float(pm.predict_v2(w, hw))))
+    assert sweep, "no candidate divides the shard size"
+    return sweep
+
+
+def choose_blocksize(
+    cols: np.ndarray,
+    n: int,
+    p: int,
+    *,
+    r_nz: int | None = None,
+    topology: Topology | None = None,
+    hw=None,
+    candidates=None,
+) -> int:
+    """Eq.-11-minimizing virtual block size for this access pattern (the
+    argmin of ``blocksize_sweep`` — the paper's Fig. 4 BLOCKSIZE dial,
+    turned by the model instead of by hand)."""
+    sweep = blocksize_sweep(cols, n, p, r_nz=r_nz, topology=topology,
+                            hw=hw, candidates=candidates)
+    return min(sweep, key=lambda kv: kv[1])[0]

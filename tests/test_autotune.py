@@ -41,10 +41,13 @@ def test_rank_matches_predictors_exactly():
     plan, r_nz = _plan()
     w = tune.workload_from_plan(plan, r_nz)
     ranked = dict(tune.rank_strategies(plan, r_nz, ABEL))
-    assert ranked["condensed"] == pytest.approx(pm.predict_v3(w, ABEL))
-    assert ranked["blockwise"] == pytest.approx(pm.predict_v2(w, ABEL))
-    assert ranked["replicate"] == pytest.approx(pm.predict_replicate(w, ABEL))
-    assert ranked["overlap"] == pytest.approx(pm.predict_overlap(w, ABEL))
+    from helpers.model_error import assert_model_error
+    for rung, direct in (("condensed", pm.predict_v3(w, ABEL)),
+                         ("blockwise", pm.predict_v2(w, ABEL)),
+                         ("replicate", pm.predict_replicate(w, ABEL)),
+                         ("overlap", pm.predict_overlap(w, ABEL))):
+        assert_model_error(ranked[rung], direct, budget=1e-6,
+                           label=f"rank_strategies vs predictor [{rung}]")
 
 
 def test_overlap_never_predicted_slower_than_condensed():

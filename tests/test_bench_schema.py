@@ -1,0 +1,162 @@
+"""Unit tests for the BENCH_*.json schema gate — one per schema.
+
+The checker runs in CI between the smoke bench and the artifact upload;
+these tests pin down what it accepts and what it must reject, per bench
+family (generic rows, table3 telemetry, table5 scan rows, matrix cells).
+"""
+import json
+
+import pytest
+
+from benchmarks.check_bench_schema import PLAN_SOURCES, check_file, main
+
+
+def _write(tmp_path, doc, name="BENCH_x.json"):
+    path = tmp_path / name
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+def _rows(prefix="x.a", count=1):
+    return [{"name": f"{prefix}{i}", "us_per_call": 1.5, "derived": "d"}
+            for i in range(count)]
+
+
+def _telemetry(hot=3):
+    sources = {s: 0 for s in PLAN_SOURCES}
+    sources["memory-hit"] = hot
+    sources["host-build"] = 1
+    return {"sources": sources, "build_seconds": {"host-build": 0.01},
+            "total": hot + 1}
+
+
+def _cell(**over):
+    cell = {"workload": "spmv", "mesh": [8], "rung": "condensed",
+            "dtype": "float32", "resolved": "condensed",
+            "measured_us": 100.0, "predicted_us": 10.0, "model_error": 9.0,
+            "budget": 120.0, "within_budget": True,
+            "plan_source": "memory-hit", "plan_acquisitions": {}}
+    cell.update(over)
+    return cell
+
+
+# -- generic rows schema --
+
+def test_generic_valid(tmp_path):
+    doc = {"bench": "fig2", "smoke": True, "rows": _rows()}
+    assert check_file(_write(tmp_path, doc)) == []
+
+
+def test_generic_rejects_bad_top_level(tmp_path):
+    assert check_file(_write(tmp_path, {"bench": "x", "smoke": True}))
+    assert check_file(_write(tmp_path, {"bench": "", "smoke": True,
+                                        "rows": _rows()}))
+    assert check_file(_write(tmp_path, {"bench": "x", "smoke": "yes",
+                                        "rows": _rows()}))
+
+
+def test_generic_rejects_bad_rows(tmp_path):
+    bad = [{"name": "nodots", "us_per_call": 1, "derived": "d"},
+           {"name": "a.b", "us_per_call": -1, "derived": "d"},
+           {"name": "a.b", "us_per_call": 1, "derived": 3}]
+    for row in bad:
+        doc = {"bench": "x", "smoke": False, "rows": [row]}
+        assert check_file(_write(tmp_path, doc))
+
+
+def test_unreadable_file(tmp_path):
+    path = tmp_path / "nope.json"
+    assert check_file(str(path))
+    path.write_text("{not json")
+    assert check_file(str(path))
+
+
+# -- table3: telemetry + dynamic rows --
+
+def test_table3_valid(tmp_path):
+    doc = {"bench": "table3", "smoke": True,
+           "rows": _rows("table3.dynamic.r"),
+           "telemetry": _telemetry()}
+    assert check_file(_write(tmp_path, doc)) == []
+
+
+def test_table3_requires_telemetry_and_dynamic_rows(tmp_path):
+    doc = {"bench": "table3", "smoke": True,
+           "rows": _rows("table3.dynamic.r")}
+    assert any("telemetry" in e for e in check_file(_write(tmp_path, doc)))
+    doc = {"bench": "table3", "smoke": True, "rows": _rows("table3.x"),
+           "telemetry": _telemetry()}
+    assert any("dynamic" in e for e in check_file(_write(tmp_path, doc)))
+
+
+def test_table3_rejects_inconsistent_telemetry(tmp_path):
+    tel = _telemetry()
+    tel["total"] = 99
+    doc = {"bench": "table3", "smoke": True,
+           "rows": _rows("table3.dynamic.r"), "telemetry": tel}
+    assert any("total" in e for e in check_file(_write(tmp_path, doc)))
+    tel = _telemetry(hot=0)
+    tel["sources"]["memory-hit"] = 0
+    tel["total"] = 1
+    doc["telemetry"] = tel
+    assert any("hot-path" in e for e in check_file(_write(tmp_path, doc)))
+
+
+# -- table5: scan rows --
+
+def test_table5_requires_scan_rows(tmp_path):
+    doc = {"bench": "table5", "smoke": True, "rows": _rows("table5.heat2d.")}
+    assert any("scan" in e for e in check_file(_write(tmp_path, doc)))
+    doc["rows"] += _rows("table5.scan.cg")
+    assert check_file(_write(tmp_path, doc)) == []
+
+
+# -- matrix: per-cell records --
+
+def test_matrix_valid(tmp_path):
+    doc = {"bench": "matrix", "smoke": True, "rows": _rows("matrix.a"),
+           "cells": [_cell()]}
+    assert check_file(_write(tmp_path, doc)) == []
+
+
+def test_matrix_requires_cells(tmp_path):
+    doc = {"bench": "matrix", "smoke": True, "rows": _rows("matrix.a")}
+    assert any("cells" in e for e in check_file(_write(tmp_path, doc)))
+    doc["cells"] = []
+    assert any("cells" in e for e in check_file(_write(tmp_path, doc)))
+
+
+@pytest.mark.parametrize("bad", [
+    {"workload": ""}, {"rung": 3}, {"dtype": None}, {"resolved": ""},
+    {"mesh": [0]}, {"mesh": "8"}, {"mesh": []},
+    {"measured_us": -1}, {"predicted_us": "fast"}, {"model_error": -0.1},
+    {"budget": 0}, {"within_budget": "yes"},
+    {"plan_source": "magic"},
+])
+def test_matrix_rejects_bad_cell(tmp_path, bad):
+    doc = {"bench": "matrix", "smoke": True, "rows": _rows("matrix.a"),
+           "cells": [_cell(**bad)]}
+    assert check_file(_write(tmp_path, doc))
+
+
+def test_matrix_rejects_contradictory_verdict(tmp_path):
+    # the gate's verdict may not contradict its own inputs
+    doc = {"bench": "matrix", "smoke": True, "rows": _rows("matrix.a"),
+           "cells": [_cell(model_error=999.0, within_budget=True)]}
+    assert any("contradicts" in e for e in check_file(_write(tmp_path, doc)))
+    doc["cells"] = [_cell(model_error=1.0, within_budget=False)]
+    assert any("contradicts" in e for e in check_file(_write(tmp_path, doc)))
+
+
+# -- CLI exit codes --
+
+def test_main_exit_codes(tmp_path, capsys):
+    good = _write(tmp_path, {"bench": "fig2", "smoke": True,
+                             "rows": _rows()}, "good.json")
+    bad = _write(tmp_path, {"bench": "fig2", "smoke": True, "rows": []},
+                 "bad.json")
+    assert main([]) == 2
+    assert main([good]) == 0
+    assert capsys.readouterr().out.startswith("OK ")
+    assert main([good, bad]) == 1
+    assert "SCHEMA ERROR" in capsys.readouterr().err

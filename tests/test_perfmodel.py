@@ -111,13 +111,16 @@ def test_paper_table5_comp_prediction():
     w = pm.Heat2DWorkload(big_m=20000, big_n=20000, mprocs=4, nprocs=4,
                           topology=topo)
     pred16 = pm.predict_heat2d(w, pm.ABEL, steps=1000)
-    np.testing.assert_allclose(pred16["comp"], 122.07, rtol=0.06)
+    from helpers.model_error import assert_model_error
+    assert_model_error(122.07, pred16["comp"], budget=0.06,
+                       label="paper table5 comp, 16 threads")
     # and the 512-thread (16x32) row: 3.81 s
     topo = Topology(512, 16)
     w = pm.Heat2DWorkload(big_m=20000, big_n=20000, mprocs=16, nprocs=32,
                           topology=topo)
     pred512 = pm.predict_heat2d(w, pm.ABEL, steps=1000)
-    np.testing.assert_allclose(pred512["comp"], 3.81, rtol=0.06)
+    assert_model_error(3.81, pred512["comp"], budget=0.06,
+                       label="paper table5 comp, 512 threads")
     # scaling across rows is exact (32x fewer points per thread)
-    np.testing.assert_allclose(pred16["comp"] / pred512["comp"], 32.0,
-                               rtol=1e-6)
+    assert_model_error(pred16["comp"] / pred512["comp"], 32.0, budget=1e-6,
+                       label="row-to-row proportionality")

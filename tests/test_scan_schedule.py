@@ -283,9 +283,10 @@ def test_predict_scan_schedule_consistency():
     stages = [("g", "get", w, None), ("s", "put",
               select.workload_from_plan(plan.transpose(), 4), None)]
     loop = pm.predict_scan_schedule(stages, pm.ABEL, 50)
+    from helpers.model_error import assert_model_error
     assert loop["total"] <= loop["sum_redispatch"]
-    assert abs(loop["total"] - (loop["setup"] + 50 * loop["per_iter"])) \
-        < 1e-12
+    assert_model_error(loop["total"], loop["setup"] + 50 * loop["per_iter"],
+                       budget=1e-9, label="scan total = setup + n*per_iter")
     assert loop["per_call"] == pm.predict_schedule(stages, pm.ABEL)["total"]
 
     # rank_strategies(scan_steps=...) is exactly the per-rung re-pricing
@@ -294,7 +295,8 @@ def test_predict_scan_schedule_consistency():
     looped = dict(select.rank_strategies(plan, 4, pm.ABEL, scan_steps=50))
     assert set(looped) == set(base)
     for name, t in base.items():
-        assert abs(looped[name] - pm.scan_loop_cost(t, setup, 50)) < 1e-12
+        assert_model_error(looped[name], pm.scan_loop_cost(t, setup, 50),
+                           budget=1e-9, label=f"scan re-pricing [{name}]")
 
 
 def test_predict_heat2d_scan_amortizes():
