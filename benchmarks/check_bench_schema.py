@@ -12,7 +12,9 @@ per-PR trajectory.  Checked, per file:
   ``sources`` covering exactly the five ``PLAN_SOURCES``, per-source
   ``build_seconds``, and a ``total`` consistent with the source counts —
   with at least one hot-path acquisition recorded (the dynamic rows ran);
-* table3 must include the ``table3.dynamic.*`` rows;
+* table3 must include the ``table3.dynamic.*`` rows AND the
+  ``table3.kernel.*`` rows (the fused Pallas exchange path, each carrying
+  ``predicted_us=`` and ``vs_jnp=`` in ``derived``);
 * table5 must include the ``table5.scan.*`` rows (the persistent
   scan-window loops — heat2d + CG — actually ran);
 * ``BENCH_matrix.json`` carries the per-cell ``cells`` records of the
@@ -155,6 +157,20 @@ def check_file(path: str) -> list:
         if not any(n.startswith("table3.dynamic.") for n in names):
             errors.append(f"{path}: missing table3.dynamic.* rows "
                           "(per-batch routed MoE bench)")
+        kernel_rows = [r for r in doc.get("rows", [])
+                       if isinstance(r, dict) and str(r.get("name", ""))
+                       .startswith("table3.kernel.")]
+        if not kernel_rows:
+            errors.append(f"{path}: missing table3.kernel.* rows "
+                          "(fused Pallas exchange-path bench)")
+        for r in kernel_rows:
+            derived = r.get("derived", "")
+            if ("predicted_us=" not in derived
+                    or "vs_jnp=" not in derived):
+                errors.append(
+                    f"{path}: {r.get('name')}: kernel rows must carry "
+                    "predicted_us= and vs_jnp= in 'derived', got "
+                    f"{derived!r}")
     if bench == "table5":
         if not any(n.startswith("table5.scan.") for n in names):
             errors.append(f"{path}: missing table5.scan.* rows "

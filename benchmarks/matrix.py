@@ -170,7 +170,8 @@ def _verify_tol(dtype: str) -> dict:
             else dict(rtol=0.2, atol=0.2))
 
 
-def _build_spmv(cell, mesh, axis_name, hw, *, skewed: bool):
+def _build_spmv(cell, mesh, axis_name, hw, *, skewed: bool,
+                use_kernel: bool = False):
     from repro.comm.pattern import AccessPattern
     from repro.comm.schedule import Schedule
     from repro.core.matrix import make_mesh_like_matrix, spmv_ref_np
@@ -202,7 +203,8 @@ def _build_spmv(cell, mesh, axis_name, hw, *, skewed: bool):
     sched.compute(lambda xc, d_, v_, c_, xl: d_ * xl + (v_ * xc[c_]).sum(-1),
                   g, dg, vl, cl, x, name="spmv")
     step = sched.compile(mesh, axis_name=axis_name, strategy=cell["rung"],
-                         blocksize=max(8, n // p // 16), hw=hw)
+                         blocksize=max(8, n // p // 16), hw=hw,
+                         use_kernel=use_kernel)
     xs = step.shard_input(x_host)
     np.testing.assert_allclose(_f32(step(xs)), ref, **_verify_tol(dtype))
     return step, (xs,), step.strategies["exchange"]
@@ -280,6 +282,10 @@ _BUILDERS = {
                                                    skewed=False),
     "spmv_skewed": lambda cell, mesh, ax, hw: _build_spmv(cell, mesh, ax, hw,
                                                           skewed=True),
+    # the same exchange driven through the fused Pallas pack/unpack kernels
+    # (use_kernel=True), priced by the kernel-variant §5 compute terms
+    "spmv_kernel": lambda cell, mesh, ax, hw: _build_spmv(
+        cell, mesh, ax, hw, skewed=False, use_kernel=True),
     "moe_dispatch": _build_moe_dispatch,
     "gnn": _build_gnn,
 }

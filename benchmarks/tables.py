@@ -128,6 +128,8 @@ def table3_strategies(n=1 << 17, r_nz=16, iters=50, smoke=False):
 
     table3_unpack_modes(n=n, r_nz=r_nz, iters=iters, mesh=mesh, m=m,
                         x_host=x_host, y_ref=y_ref)
+    table3_kernel(n=n, r_nz=r_nz, iters=iters, mesh=mesh, m=m,
+                  x_host=x_host, y_ref=y_ref)
     table3_moe_dispatch(smoke=smoke, iters=iters)
     table3_scatter(smoke=smoke, iters=iters)
     table3_schedule(smoke=smoke, iters=iters)
@@ -162,6 +164,55 @@ def table3_unpack_modes(*, n, r_nz, iters, mesh, m, x_host, y_ref):
         csv_row(f"table3.unpack.{mode}", t * 1e6,
                 f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
                 f"dest_slots={eng.plan.dest_len}")
+
+
+# --------------------------------------------------------------------------
+# Table 3g: the fused Pallas exchange path (use_kernel=True) on the
+# condensed/overlap rungs, both directions, against the bit-identical jnp
+# reference — priced by the kernel-variant §5 compute terms (eqs. 14ᵏ/15ᵏ,
+# 14ᵀᵏ/15ᵀᵏ; docs/perf_model.md)
+# --------------------------------------------------------------------------
+
+def table3_kernel(*, n, r_nz, iters, mesh, m, x_host, y_ref):
+    from repro.comm import select
+    from repro.core import tune
+    from repro.core.matrix import spmv_t_ref_np
+
+    print("# table3 kernel: fused pack/unpack exchange kernels vs the jnp "
+          "path (bit-identical), per-variant §5 prediction")
+    hw = tune.measure_hardware(mesh, "data")
+    yt_ref = spmv_t_ref_np(m, x_host)
+    bs = n // 8 // 16
+    for direction in ("gather", "scatter"):
+        transpose = direction == "scatter"
+        ref = yt_ref if transpose else y_ref
+        # hold the local compute constant (dest-mode slot compute for the
+        # gather, scatter-accumulate for the put) so the pair differs ONLY
+        # in the exchange path — that is the bit-identity contract
+        mat = None if transpose else "dest"
+        for strategy in ("condensed", "overlap"):
+            t, y = {}, {}
+            for uk in (False, True):
+                eng = DistributedSpMV(m, mesh, strategy=strategy,
+                                      blocksize=bs, shards_per_node=1,
+                                      transpose=transpose, use_kernel=uk,
+                                      materialize=mat, hw=hw)
+                x = eng.shard_vector(x_host)
+                y[uk] = np.asarray(eng(x))
+                np.testing.assert_allclose(y[uk], ref, rtol=2e-4, atol=2e-4)
+                t[uk] = timeit(eng, x, iters=iters)
+                if uk:
+                    plan = eng.splan if transpose else eng.plan
+                    t_pred = dict(select.rank_strategies(
+                        plan, r_nz, hw, use_kernel=True, materialize=mat,
+                        dest_slots=None if transpose else plan.dest_len,
+                        direction="put" if transpose else "get"))[strategy]
+            np.testing.assert_array_equal(y[True], y[False])
+            acc = min(t[True], t_pred) / max(t[True], t_pred)
+            csv_row(f"table3.kernel.{direction}.{strategy}", t[True] * 1e6,
+                    f"predicted_us={t_pred*1e6:.1f} accuracy={acc:.2f} "
+                    f"vs_jnp={t[True]/t[False]:.2f}x jnp_us={t[False]*1e6:.1f}"
+                    " bit_identical=verified")
 
 
 # --------------------------------------------------------------------------

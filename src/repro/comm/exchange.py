@@ -147,7 +147,13 @@ class IrregularExchange:
         base_plan: CommPlan | None = None,
         scan_steps: int | None = None,
         plan_cost: float = 0.0,
+        use_kernel: bool = False,
     ):
+        # ``use_kernel`` swaps the jnp pack/unpack around the collective for
+        # the fused Pallas kernels (repro.kernels), bit-identical on every
+        # rung; the §5 ranking prices the kernelized compute terms so
+        # strategy="auto" stays honest either way
+        self.use_kernel = use_kernel
         if isinstance(where, SharedVector):
             assert where.n == pattern.n, (where.n, pattern.n)
             mesh = where.mesh
@@ -267,7 +273,7 @@ class IrregularExchange:
 
     def _price_kwargs(self) -> dict:
         """Extra ``rank_strategies`` kwargs (e.g. gather unpack pricing)."""
-        return {}
+        return {"use_kernel": self.use_kernel}
 
     def _bind(self, base_plan: CommPlan, strategy: str) -> None:
         """Wire the resolved strategy: set ``self.plan`` / ``plan_args`` /

@@ -101,16 +101,17 @@ class IrregularGather(IrregularExchange):
         the auto ranking prices when ``destination`` is a callable (a
         plain ``Destination`` knows its own).  Remaining keyword arguments
         (``axis_name``, ``strategy``, ``blocksize``, ``shards_per_node``,
-        ``topology``, ``hw``, ``candidates``, ``use_plan_cache``) are the
-        shared ``IrregularExchange`` surface."""
+        ``topology``, ``hw``, ``candidates``, ``use_plan_cache``,
+        ``use_kernel``) are the shared ``IrregularExchange`` surface."""
         self._destination_arg = destination
         self._dest_slots = dest_slots
         super().__init__(pattern, where, **kwargs)
 
     def _price_kwargs(self) -> dict:
+        kw = super()._price_kwargs()
         destination = self._destination_arg
         if destination is None:
-            return {}
+            return kw
         # with a destination, price the targeted O(slots + recv) unpack
         # instead of the O(n) full-copy assembly (§5 + the new term)
         if callable(destination):
@@ -124,7 +125,8 @@ class IrregularGather(IrregularExchange):
             slots = self._dest_slots
         else:
             slots = destination.num_slots
-        return {"materialize": "dest", "dest_slots": slots}
+        kw.update(materialize="dest", dest_slots=slots)
+        return kw
 
     def _bind(self, base_plan: CommPlan, strategy: str) -> None:
         mesh, axis_name, p, n = self.mesh, self.axis_name, self.p, self.pattern.n
@@ -171,7 +173,7 @@ class IrregularGather(IrregularExchange):
             jax.device_put(a, shard) for a in device_args
         )
         self._start, self._finish = strat.make_start_local(
-            self.plan, strategy, axis_name)
+            self.plan, strategy, axis_name, use_kernel=self.use_kernel)
 
         def gather_only_local(x_local, *plan_args):
             recv = self._start(x_local, *plan_args)

@@ -93,8 +93,8 @@ class IrregularScatter(IrregularExchange):
         """``reduce`` picks the duplicate-combining semantic (``"add"`` /
         ``"set"`` / ``"max"``).  Remaining keyword arguments (``axis_name``,
         ``strategy``, ``blocksize``, ``shards_per_node``, ``topology``,
-        ``hw``, ``candidates``, ``use_plan_cache``) are the shared
-        ``IrregularExchange`` surface."""
+        ``hw``, ``candidates``, ``use_plan_cache``, ``use_kernel``) are the
+        shared ``IrregularExchange`` surface."""
         if reduce not in strat.SCATTER_REDUCES:
             raise ValueError(
                 f"reduce must be one of {strat.SCATTER_REDUCES}")
@@ -159,7 +159,8 @@ class IrregularScatter(IrregularExchange):
             jax.device_put(a, shard) for a in device_args
         )
         self._start, self._finish = strat.make_scatter_start_local(
-            splan, strategy, axis_name, self.reduce)
+            splan, strategy, axis_name, self.reduce,
+            use_kernel=self.use_kernel)
 
         self._scatter_all = jax.jit(compat.shard_map(
             self.local,

@@ -197,6 +197,7 @@ class Schedule:
     def gather(self, pattern: AccessPattern, *, src: StageRef | None = None,
                destination=None, dest_slots: int | None = None,
                strategy: str | None = None, blocksize=None,
+               use_kernel: bool | None = None,
                finish_kwargs: dict | None = None,
                double_buffer: bool = False, prime: StageRef | None = None,
                name: str | None = None) -> StageRef:
@@ -205,8 +206,8 @@ class Schedule:
 
         The stage value is the strategy's default materialization: the
         ``{name: slots}`` dict with a ``destination``, else the full
-        ``x_copy``.  ``strategy`` / ``blocksize`` override the schedule
-        defaults per stage; ``finish_kwargs`` are forwarded to
+        ``x_copy``.  ``strategy`` / ``blocksize`` / ``use_kernel`` override
+        the schedule defaults per stage; ``finish_kwargs`` are forwarded to
         ``OverlapHandle.finish`` (``extra_slots=`` / ``copy_own=``).
 
         ``double_buffer=True`` (only under ``Schedule.scan``): the stage's
@@ -242,6 +243,7 @@ class Schedule:
         return self._add("gather", name, pattern=pattern, src=src,
                          destination=destination, dest_slots=dest_slots,
                          strategy=strategy, blocksize=blocksize,
+                         use_kernel=use_kernel,
                          double_buffer=double_buffer,
                          finish_kwargs=dict(finish_kwargs or {}))
 
@@ -287,31 +289,40 @@ class Schedule:
 
     def scatter(self, pattern: AccessPattern, src: StageRef, *,
                 reduce: str = "add", strategy: str | None = None,
-                blocksize=None, name: str | None = None) -> StageRef:
+                blocksize=None, use_kernel: bool | None = None,
+                name: str | None = None) -> StageRef:
         """Push stage: ``src``'s value is the (rows_local, r, feat...)
         contribution table; the stage value is the combined owned slice.
         A pattern already gathered by a sibling stage reuses its base plan
-        (the scatter tables are a transpose-derived delta)."""
+        (the scatter tables are a transpose-derived delta).  ``strategy`` /
+        ``blocksize`` / ``use_kernel`` override the schedule defaults per
+        stage."""
         self._check_ref(src, array_valued=True)
         if reduce not in strat.SCATTER_REDUCES:
             raise ValueError(f"reduce must be one of {strat.SCATTER_REDUCES}")
         pattern = _unwrap_dynamic(pattern)
         return self._add("scatter", name, pattern=pattern, src=src,
                          reduce=reduce, strategy=strategy,
-                         blocksize=blocksize)
+                         blocksize=blocksize, use_kernel=use_kernel)
 
     # ---- resolution (shared exchange-core context) ----
     def _exchange_stages(self) -> list[_Stage]:
         return [s for s in self._stages if s.kind in ("gather", "scatter")]
 
     def resolve(self, mesh, *, axis_name="data", strategy: str = "auto",
-                blocksize=None, topology: Topology | None = None,
+                blocksize=None, use_kernel: bool = False,
+                topology: Topology | None = None,
                 shards_per_node: int | None = None, hw=None,
                 use_plan_cache: bool = True,
                 scan_steps: int | None = None) -> "Schedule":
         """Resolve every exchange stage against one shared context: one
         ``measure_hw`` memo hit, one base-plan probe per unique pattern,
         transpose-derived scatter plans reused from sibling gathers.
+
+        ``use_kernel`` is the schedule-wide default for the fused Pallas
+        pack/unpack path (each stage's own ``use_kernel=`` wins when set);
+        ``"auto"`` stages are priced with the kernelized compute terms so
+        the ranking matches what the window will actually run.
 
         ``scan_steps`` (set by ``Schedule.scan(n_steps_hint=...)``) makes
         every ``"auto"`` stage rank rungs on the n-step steady-state LOOP
@@ -355,11 +366,14 @@ class Schedule:
                     st.pattern.indices, st.pattern.n, p, blocksize=bs,
                     topology=topology, cache=use_plan_cache)
             st_strategy = st.strategy if st.strategy is not None else strategy
+            st_use_kernel = (st.use_kernel if st.use_kernel is not None
+                             else use_kernel)
             kwargs = dict(axis_name=axis_name, strategy=st_strategy,
                           topology=topology, hw=hw,
                           use_plan_cache=use_plan_cache,
                           base_plan=base_plans[key],
-                          scan_steps=scan_steps)
+                          scan_steps=scan_steps,
+                          use_kernel=st_use_kernel)
             if st.kind == "gather":
                 ex = IrregularGather(
                     st.pattern, mesh, destination=st.destination,
@@ -396,10 +410,11 @@ class Schedule:
                               if ex.destination is not None else None)
                 w = select.workload_from_plan(
                     ex.plan, st.pattern.r, materialize=materialize,
-                    dest_slots=dest_slots)
+                    dest_slots=dest_slots, use_kernel=ex.use_kernel)
                 specs.append((st.name, "get", w, ex.strategy))
             else:
-                w = select.workload_from_plan(ex.splan, st.pattern.r)
+                w = select.workload_from_plan(ex.splan, st.pattern.r,
+                                              use_kernel=ex.use_kernel)
                 specs.append((st.name, "put", w, ex.strategy))
         return specs
 

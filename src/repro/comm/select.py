@@ -36,7 +36,8 @@ def _perfmodel():
 
 def workload_from_plan(plan, r_nz: int, *,
                        materialize: str | None = None,
-                       dest_slots: int | None = None):
+                       dest_slots: int | None = None,
+                       use_kernel: bool = False):
     """Build the §5 workload record for one plan.
 
     ``plan`` may be a gather ``CommPlan`` or a put-direction
@@ -50,6 +51,10 @@ def workload_from_plan(plan, r_nz: int, *,
     the consumer-targeted O(slots + recv) unpack instead.  ``dest_slots``
     defaults to the plan's ``dest_len`` (the flattened ``Destination``
     size).
+
+    ``use_kernel=True`` prices the fused Pallas pack/unpack variants of
+    the compute terms (eqs. 14/15 and 14ᵀ/15ᵀ) instead of the jnp
+    formulas — one HBM pass per element on each side of the wire.
     """
     pm = _perfmodel()
     if dest_slots is None and materialize == "dest":
@@ -57,7 +62,8 @@ def workload_from_plan(plan, r_nz: int, *,
     return pm.SpmvWorkload(
         n=plan.n, r_nz=r_nz, p=plan.p, blocksize=plan.blocksize,
         topology=plan.topology, counts=plan.counts, m=plan.m,
-        materialize=materialize, dest_slots=dest_slots)
+        materialize=materialize, dest_slots=dest_slots,
+        use_kernel=use_kernel)
 
 
 def rank_strategies(
@@ -68,6 +74,7 @@ def rank_strategies(
     candidates=None,
     materialize: str | None = None,
     dest_slots: int | None = None,
+    use_kernel: bool = False,
     direction: str = "get",
     scan_steps: int | None = None,
     overlap_credit: float = 0.0,
@@ -84,7 +91,8 @@ def rank_strategies(
     ``materialize`` / ``dest_slots`` thread the gather unpack-mode pricing
     through (see ``workload_from_plan``) so a consumer with a
     ``Destination`` descriptor ranks rungs by the targeted-unpack cost it
-    will actually pay.
+    will actually pay; ``use_kernel`` likewise prices the fused Pallas
+    pack/unpack variants of the compute terms.
 
     ``scan_steps`` re-prices every rung as a steady-state LOOP of that
     many iterations inside one persistent scan window
@@ -107,7 +115,7 @@ def rank_strategies(
     if direction not in ("get", "put"):
         raise ValueError(f"direction must be 'get' or 'put', got {direction!r}")
     w = workload_from_plan(plan, r_nz, materialize=materialize,
-                           dest_slots=dest_slots)
+                           dest_slots=dest_slots, use_kernel=use_kernel)
     predictors = (pm.PUT_STRATEGY_PREDICTORS if direction == "put"
                   else pm.STRATEGY_PREDICTORS)
     names = tuple(candidates) if candidates else tuple(predictors)

@@ -306,7 +306,8 @@ def make_gather_local(plan: CommPlan, strategy: str, axis_name):
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
-def make_start_local(plan: CommPlan, strategy: str, axis_name):
+def make_start_local(plan: CommPlan, strategy: str, axis_name, *,
+                     use_kernel: bool = False):
     """Returns (start_fn, finish_fn) splitting the strategy at its collective.
 
     ``start_fn(x_local, *plan_args) -> in_flight``; ``finish_fn(in_flight,
@@ -320,7 +321,17 @@ def make_start_local(plan: CommPlan, strategy: str, axis_name):
     n); ``"dest"`` returns the flat ``(dest_len, ...)`` consumer-slot buffer
     with no full-length intermediate.  Without a destination only
     ``"full"`` is available.
+
+    ``use_kernel=True`` swaps the jnp pack/unpack around the (unchanged)
+    collective for the fused Pallas kernels in ``repro.kernels`` — one HBM
+    pass per element on each side of the wire, bit-identical to the jnp
+    path (the kernels execute the same op sequence; see
+    kernels/pack_gather.py).  Replicate has no pack side, so only its
+    targeted unpack kernelizes.
     """
+    if use_kernel:
+        return _make_kernel_start_local(plan, strategy, axis_name)
+
     def unpack_dest(recv_flat, x_local, dest):
         src, own_idx, own_mask, rem_mask = dest
         return dest_gather_local(recv_flat, x_local, src[0], own_idx[0],
@@ -372,6 +383,102 @@ def make_start_local(plan: CommPlan, strategy: str, axis_name):
                 recv, x_local, recv_blk, axis_name=axis_name, n=plan.n,
                 shard_size=plan.shard_size, blocksize=plan.blocksize,
                 extra_slots=extra_slots, copy_own=copy_own)
+
+        return start, finish
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def _make_kernel_start_local(plan: CommPlan, strategy: str, axis_name):
+    """Kernelized (start, finish) pair: fused Pallas pack / unpack around
+    the same collective (the ``use_kernel=True`` arm of
+    ``make_start_local``).
+
+    Pack = ``kernels.pack_gather`` (Listing 5's pack loop, shard
+    VMEM-resident); full finish = ``kernels.unpack_scatter_set`` (eq.-15
+    scatter + eq.-14 own memcpy in one pass); dest finish =
+    ``kernels.unpack_dest`` (the fused ``dest_gather_local``).  Blockwise
+    rides the same kernels with whole virtual blocks as the unit rows.
+    """
+    from repro.kernels import ops as kops  # deferred: kernels never import comm
+
+    def unpack_dest(recv_flat, x_local, dest):
+        src, own_idx, own_mask, rem_mask = dest
+        return kops.unpack_dest(recv_flat, x_local, src[0], own_idx[0],
+                                own_mask[0], rem_mask[0])
+
+    if strategy == "replicate":
+        def start(x_local, *args):
+            return replicate_gather_local(x_local, axis_name=axis_name)
+
+        def finish(recv, x_local, *args, extra_slots=0, copy_own=True,
+                   materialize="full"):
+            if materialize == "dest":
+                return unpack_dest(recv, x_local, args)
+            if extra_slots:
+                feat = x_local.shape[1:]
+                pad = jnp.zeros((1 + extra_slots,) + feat, x_local.dtype)
+                return jnp.concatenate([recv, pad], axis=0)
+            return recv
+
+        return start, finish
+    if strategy in ("condensed", "overlap"):
+        def start(x_local, send_idx, recv_idx, *dest):
+            feat = x_local.shape[1:]
+            p, s_max = send_idx.shape[1], send_idx.shape[2]
+            buf = kops.pack_gather(x_local, send_idx[0].reshape(-1))
+            return jax.lax.all_to_all(
+                buf.reshape((p, s_max) + feat), axis_name,
+                split_axis=0, concat_axis=0, tiled=True)
+
+        def finish(recv, x_local, send_idx, recv_idx, *dest, extra_slots=0,
+                   copy_own=True, materialize="full"):
+            feat = x_local.shape[1:]
+            if materialize == "dest":
+                return unpack_dest(recv.reshape((-1,) + feat), x_local, dest)
+            me = _my_shard(axis_name)
+            return kops.unpack_scatter_set(
+                recv.reshape((-1,) + feat), recv_idx[0].ravel(), x_local,
+                me * plan.shard_size, out_len=plan.n + 1 + extra_slots,
+                copy_own=copy_own)
+
+        return start, finish
+    if strategy == "blockwise":
+        blocksize = plan.blocksize
+        blocks_per_shard = plan.shard_size // blocksize
+        nblks = plan.n // blocksize
+
+        def start(x_local, send_blk, recv_blk, *dest):
+            feat = x_local.shape[1:]
+            p, b_max = send_blk.shape[1], send_blk.shape[2]
+            xb = x_local.reshape((blocks_per_shard, blocksize) + feat)
+            buf = kops.pack_gather(xb, send_blk[0].reshape(-1))
+            return jax.lax.all_to_all(
+                buf.reshape((p, b_max, blocksize) + feat), axis_name,
+                split_axis=0, concat_axis=0, tiled=True)
+
+        def finish(recv, x_local, send_blk, recv_blk, *dest, extra_slots=0,
+                   copy_own=True, materialize="full"):
+            feat = x_local.shape[1:]
+            if materialize == "dest":
+                return unpack_dest(recv.reshape((-1,) + feat), x_local, dest)
+            blk_idx = recv_blk[0].ravel()
+            if extra_slots:
+                assert extra_slots < blocksize, (
+                    "zero-slot region must fit inside one virtual block")
+                blk_idx = jnp.where(blk_idx == nblks, nblks + 1, blk_idx)
+                out_blocks = nblks + 2
+            else:
+                out_blocks = nblks + 1
+            me = _my_shard(axis_name)
+            # own copy lands at flat offset me*shard_size == block row
+            # me*blocks_per_shard — block-aligned, so the block-unit kernel
+            # writes the exact same elements as the flat jnp update
+            x_blocks = kops.unpack_scatter_set(
+                recv.reshape((-1, blocksize) + feat), blk_idx,
+                x_local.reshape((blocks_per_shard, blocksize) + feat),
+                me * blocks_per_shard, out_len=out_blocks,
+                copy_own=copy_own)
+            return x_blocks.reshape((-1,) + feat)
 
         return start, finish
     raise ValueError(f"unknown strategy {strategy!r}")
@@ -624,7 +731,7 @@ def scatter_in_specs(strategy: str, axis_name):
 
 
 def make_scatter_start_local(splan: ScatterPlan, strategy: str, axis_name,
-                             reduce: str):
+                             reduce: str, *, use_kernel: bool = False):
     """Returns (start_fn, finish_fn) splitting the scatter at its collective.
 
     ``start_fn(vals_local, *plan_args) -> in_flight`` packs (sender-side
@@ -634,7 +741,19 @@ def make_scatter_start_local(splan: ScatterPlan, strategy: str, axis_name,
     anything else scheduled in between) with the in-flight collective — and
     then combines the landed foreign contributions.  The ``overlap`` rung is
     the ``condensed`` exchange consumed through this split.
+
+    ``use_kernel=True`` swaps the jnp segment-combines for the push-side
+    split kernels: ``kernels.accumulate_segments`` for the sender-side pack
+    (12ᵀ) and the own-target accumulate (the half of 15ᵀ with no data
+    dependency on the collective — it runs while the all_to_all is in
+    flight, mirroring ``ops.make_spmv_overlap_sharded``'s own/foreign
+    split), then ``kernels.accumulate_into`` folds the landed foreign
+    contributions into that result.  Bit-identical to the jnp path on every
+    rung × reduce (same op sequence, single-program combine order).
     """
+    if use_kernel:
+        return _make_kernel_scatter_start_local(splan, strategy, axis_name,
+                                                reduce)
     if reduce not in SCATTER_REDUCES:
         raise ValueError(f"reduce must be one of {SCATTER_REDUCES}")
     shard_size = splan.shard_size
@@ -680,6 +799,100 @@ def make_scatter_start_local(splan: ScatterPlan, strategy: str, axis_name,
                 recv, vals, unpack_blk, own_idx, win, touched,
                 shard_size=shard_size, blocksize=splan.blocksize,
                 reduce=reduce)
+
+        return start, finish
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def _make_kernel_scatter_start_local(splan: ScatterPlan, strategy: str,
+                                     axis_name, reduce: str):
+    """Kernelized (start, finish) pair for the put direction (the
+    ``use_kernel=True`` arm of ``make_scatter_start_local``).
+
+    The winner mask for ``reduce="set"`` stays a jnp elementwise multiply
+    outside the kernels (deterministic either way; keeps the kernels
+    reduce-generic), exactly mirroring where the jnp path applies it.
+    """
+    from repro.kernels import ops as kops  # deferred: kernels never import comm
+
+    if reduce not in SCATTER_REDUCES:
+        raise ValueError(f"reduce must be one of {SCATTER_REDUCES}")
+    shard_size = splan.shard_size
+    if strategy == "replicate":
+        def start(vals, tgt, win, touched):
+            feat = vals.shape[2:]
+            v = _apply_set_mask(vals, win, reduce)
+            acc = kops.accumulate_segments(
+                v.reshape((-1,) + feat), tgt.ravel(), out_len=splan.n,
+                reduce=reduce)
+            if reduce == "max":
+                return jax.lax.pmax(acc, axis_name)
+            return jax.lax.psum(acc, axis_name)
+
+        def finish(y_full, vals, tgt, win, touched):
+            me = _my_shard(axis_name)
+            y = jax.lax.dynamic_slice_in_dim(
+                y_full, me * shard_size, shard_size, 0)
+            return _mask_untouched(y, touched[0], reduce)
+
+        return start, finish
+    if strategy in ("condensed", "overlap"):
+        p, s_max = splan.p, splan.s_max
+
+        def start(vals, msg_idx, unpack_idx, own_idx, win, touched):
+            feat = vals.shape[2:]
+            v = _apply_set_mask(vals, win, reduce)
+            buf = kops.accumulate_segments(
+                v.reshape((-1,) + feat), msg_idx.ravel(),
+                out_len=p * s_max + 1, reduce=reduce)
+            return jax.lax.all_to_all(
+                buf[:p * s_max].reshape((p, s_max) + feat), axis_name,
+                split_axis=0, concat_axis=0, tiled=True)
+
+        def finish(recv, vals, msg_idx, unpack_idx, own_idx, win, touched):
+            feat = vals.shape[2:]
+            v = _apply_set_mask(vals, win, reduce)
+            # push-side split: the own-accumulate reads only local
+            # contributions, so it runs while the all_to_all is in flight;
+            # the landed-foreign kernel then folds recv into its result
+            own = kops.accumulate_segments(
+                v.reshape((-1,) + feat), own_idx.ravel(),
+                out_len=shard_size + 1, reduce=reduce)
+            acc = kops.accumulate_into(
+                own, recv.reshape((-1,) + feat), unpack_idx[0].ravel(),
+                reduce=reduce)
+            return _mask_untouched(acc[:shard_size], touched[0], reduce)
+
+        return start, finish
+    if strategy == "blockwise":
+        p, b_max, blocksize = splan.p, splan.b_max, splan.blocksize
+        blocks_per_shard = shard_size // blocksize
+
+        def start(vals, msg_idx, unpack_blk, own_idx, win, touched):
+            feat = vals.shape[2:]
+            v = _apply_set_mask(vals, win, reduce)
+            buf = kops.accumulate_segments(
+                v.reshape((-1,) + feat), msg_idx.ravel(),
+                out_len=p * b_max * blocksize + 1, reduce=reduce)
+            return jax.lax.all_to_all(
+                buf[:p * b_max * blocksize].reshape(
+                    (p, b_max * blocksize) + feat),
+                axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+        def finish(recv, vals, msg_idx, unpack_blk, own_idx, win, touched):
+            feat = vals.shape[2:]
+            v = _apply_set_mask(vals, win, reduce)
+            own = kops.accumulate_segments(
+                v.reshape((-1,) + feat), own_idx.ravel(),
+                out_len=shard_size + 1, reduce=reduce)
+            y_own = own[:shard_size]
+            accb = kops.accumulate_segments(
+                recv.reshape((-1, blocksize) + feat), unpack_blk[0].ravel(),
+                out_len=blocks_per_shard + 1, reduce=reduce)
+            y_blocks = accb[:blocks_per_shard].reshape((shard_size,) + feat)
+            y = (jnp.maximum(y_blocks, y_own) if reduce == "max"
+                 else y_blocks + y_own)
+            return _mask_untouched(y, touched[0], reduce)
 
         return start, finish
     raise ValueError(f"unknown strategy {strategy!r}")

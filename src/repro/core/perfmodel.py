@@ -93,6 +93,12 @@ class SpmvWorkload:
     #            the eq.-14 own-copy vanishes and eq. 15 becomes O(slots).
     materialize: str | None = None
     dest_slots: int | None = None   # flattened Destination size L
+    # Kernelized pack/unpack pricing (docs/perf_model.md kernel rows):
+    # the fused Pallas kernels (repro.kernels) touch HBM once per element
+    # on each side of the wire, so the compute terms of eqs. 14/15 (and
+    # 14ᵀ/15ᵀ) shed their re-read and cacheline-grain charges.  Wire terms
+    # are untouched — the collective is the same either way.
+    use_kernel: bool = False
 
     @property
     def shard_size(self) -> int:
@@ -154,10 +160,13 @@ def predict_v2(w: SpmvWorkload, hw: HardwareParams) -> float:
         total = max(total, np.max(t_comp[th]) + t_local + t_remote)
     # unpack-mode extension (docs/perf_model.md): the paper's UPCv2 reads
     # landed blocks in place; our functional paths pay a delivery tail
+    # (halved / cacheline-free under the fused kernels' single HBM pass)
     if w.materialize == "full":
-        total += 2.0 * (w.n + w.blocksize) * hw.elem / hw.w_private
+        tail = 2.0 * (w.n + w.blocksize) * hw.elem / hw.w_private
+        total += 0.5 * tail if w.use_kernel else tail
     elif w.materialize == "dest":
-        total += (w.dest_slots or 0) * (hw.elem + hw.cacheline) / hw.w_private
+        per_slot = hw.elem if w.use_kernel else hw.elem + hw.cacheline
+        total += (w.dest_slots or 0) * per_slot / hw.w_private
     return float(total)
 
 
@@ -180,24 +189,45 @@ def v3_components(
     c = w.counts
     s_out = c.s_local_out + c.s_remote_out
     s_in = c.s_local_in + c.s_remote_in
-    t_pack = s_out * (2 * hw.elem + hw.idx) / hw.w_private           # (12)
+    if w.use_kernel:
+        # fused pack kernel: each packed element is one VMEM-local gather
+        # (value read + index read + contiguous write, no re-read)
+        t_pack = s_out * (hw.elem + hw.idx) / hw.w_private          # (12ᵏ)
+    else:
+        t_pack = s_out * (2 * hw.elem + hw.idx) / hw.w_private       # (12)
     if w.materialize == "dest":
         slots = w.dest_slots or 0
         t_copy = np.zeros(w.p)                                      # no (14)
-        # (15'): read each landed value + its index once out of the small
-        # condensed recv buffer, then write the L slots contiguously in
-        # consumer order (the delivery IS the consumer's gather, so no
-        # extra cacheline charge per slot)
-        t_unpack = (s_in * (hw.elem + hw.idx) / hw.w_private
-                    + slots * hw.elem / hw.w_private)
+        if w.use_kernel:
+            # fused dest-unpack kernel: recv buffer and shard stay VMEM-
+            # resident, each slot is one masked gather + one write — the
+            # landed index reads fold into the slot pass
+            t_unpack = (s_in * hw.elem / hw.w_private
+                        + slots * hw.elem / hw.w_private)           # (15ᵏ')
+        else:
+            # (15'): read each landed value + its index once out of the
+            # small condensed recv buffer, then write the L slots
+            # contiguously in consumer order (the delivery IS the
+            # consumer's gather, so no extra cacheline charge per slot)
+            t_unpack = (s_in * (hw.elem + hw.idx) / hw.w_private
+                        + slots * hw.elem / hw.w_private)
     else:
         t_copy = np.full(
             w.p, 2.0 * w.shard_size * hw.elem / hw.w_private        # (14)
         )
-        t_unpack = s_in * (hw.elem + hw.idx
-                           + hw.cacheline) / hw.w_private           # (15)
-        if w.materialize == "full":
-            t_unpack = t_unpack + full_assembly_tax(w.n, hw)
+        if w.use_kernel:
+            # fused scatter-set kernel: landed values scatter at element
+            # grain inside VMEM, no cacheline-grain HBM charge
+            t_unpack = s_in * (hw.elem + hw.idx) / hw.w_private     # (15ᵏ)
+            if w.materialize == "full":
+                # zero-fill and final write happen in one kernel pass:
+                # half the functional zeros+scatter assembly traffic
+                t_unpack = t_unpack + 0.5 * full_assembly_tax(w.n, hw)
+        else:
+            t_unpack = s_in * (hw.elem + hw.idx
+                               + hw.cacheline) / hw.w_private       # (15)
+            if w.materialize == "full":
+                t_unpack = t_unpack + full_assembly_tax(w.n, hw)
     return {"pack": t_pack, "copy": t_copy, "unpack": t_unpack}
 
 
@@ -246,9 +276,10 @@ def predict_replicate(w: SpmvWorkload, hw: HardwareParams) -> float:
     )
     # the all-gather output IS the full copy (no assembly tax in "full"
     # mode); targeted delivery still pays the O(slots) gather out of it
+    # (element-grain when the fused dest-unpack kernel delivers the slots)
     if w.materialize == "dest":
-        t_comm += (w.dest_slots or 0) * (hw.elem
-                                         + hw.cacheline) / hw.w_private
+        per_slot = hw.elem if w.use_kernel else hw.elem + hw.cacheline
+        t_comm += (w.dest_slots or 0) * per_slot / hw.w_private
     return float(np.max(t_comp_per_thread(w, hw)) + t_comm)
 
 
@@ -340,14 +371,26 @@ def put_components(w: SpmvWorkload, hw: HardwareParams) -> dict[str, np.ndarray]
     s_out = c.s_local_out + c.s_remote_out
     s_in = c.s_local_in + c.s_remote_in
     contribs = float(w.rows_per_shard * w.r_nz)
-    t_pack = (contribs * (hw.elem + hw.idx)
-              + s_out * 2.0 * hw.elem) / hw.w_private               # (12ᵀ)
+    if w.use_kernel:
+        # fused segment-combine kernel: the message buffer stays VMEM-
+        # resident, so the per-unique-element re-read drops
+        t_pack = (contribs * (hw.elem + hw.idx)
+                  + s_out * hw.elem) / hw.w_private                 # (12ᵀᵏ)
+    else:
+        t_pack = (contribs * (hw.elem + hw.idx)
+                  + s_out * 2.0 * hw.elem) / hw.w_private           # (12ᵀ)
     t_init = np.full(
         w.p, 2.0 * w.shard_size * hw.elem / hw.w_private)           # (14ᵀ)
     foreign = (c.c_local_indv + c.c_remote_indv).astype(np.float64)
     own_occ = np.maximum(contribs - foreign, 0.0)
-    t_acc = (s_in * (hw.elem + hw.idx + hw.cacheline)
-             + own_occ * (hw.elem + hw.cacheline)) / hw.w_private   # (15ᵀ)
+    if w.use_kernel:
+        # accumulate kernels: element-grain combines inside VMEM, no
+        # cacheline-grain HBM read-modify-write per contribution
+        t_acc = (s_in * (hw.elem + hw.idx)
+                 + own_occ * hw.elem) / hw.w_private                # (15ᵀᵏ)
+    else:
+        t_acc = (s_in * (hw.elem + hw.idx + hw.cacheline)
+                 + own_occ * (hw.elem + hw.cacheline)) / hw.w_private  # (15ᵀ)
     return {"pack": t_pack, "init": t_init, "accumulate": t_acc,
             "own_occ": own_occ}
 
@@ -381,8 +424,8 @@ def predict_put_overlap(w: SpmvWorkload, hw: HardwareParams) -> float:
     comp = t_comp_per_thread(w, hw)
     parts = put_components(w, hw)
     s_in = c.s_local_in + c.s_remote_in
-    t_own = (parts["own_occ"] * (hw.elem + hw.cacheline) / hw.w_private
-             + comp)
+    own_grain = hw.elem if w.use_kernel else hw.elem + hw.cacheline
+    t_own = parts["own_occ"] * own_grain / hw.w_private + comp
 
     comm = -np.inf
     for node in range(w.topology.num_nodes):
@@ -395,7 +438,9 @@ def predict_put_overlap(w: SpmvWorkload, hw: HardwareParams) -> float:
         t_memput = np.max(parts["pack"][th]) + t_local + t_remote
         comm = max(comm, max(t_memput, float(np.max(t_own[th]))))
 
-    t_foreign = s_in * (hw.elem + hw.idx + hw.cacheline) / hw.w_private
+    foreign_grain = (hw.elem + hw.idx if w.use_kernel
+                     else hw.elem + hw.idx + hw.cacheline)
+    t_foreign = s_in * foreign_grain / hw.w_private
     tail = np.max(parts["init"] + t_foreign)
     return float(comm + tail)
 
@@ -408,8 +453,9 @@ def predict_put_v2(w: SpmvWorkload, hw: HardwareParams) -> float:
     c = w.counts
     bs_bytes = w.blocksize * hw.elem
     contribs = float(w.rows_per_shard * w.r_nz)
-    t_pack = np.full(
-        w.p, contribs * (hw.elem + hw.cacheline) / hw.w_private)
+    pack_grain = (hw.elem + hw.idx if w.use_kernel
+                  else hw.elem + hw.cacheline)
+    t_pack = np.full(w.p, contribs * pack_grain / hw.w_private)
     t_comp = t_comp_per_thread(w, hw)
     total = -np.inf
     for node in range(w.topology.num_nodes):
@@ -419,8 +465,10 @@ def predict_put_v2(w: SpmvWorkload, hw: HardwareParams) -> float:
         total = max(total,
                     np.max(t_comp[th] + t_pack[th]) + t_local + t_remote)
     # accumulate tail: every landed block position read-modify-written
+    # (single-pass under the block-unit accumulate kernel)
+    acc_factor = 1.0 if w.use_kernel else 2.0
     t_acc = np.max((c.b_local + c.b_remote) * w.blocksize
-                   * 2.0 * hw.elem / hw.w_private)
+                   * acc_factor * hw.elem / hw.w_private)
     return float(total + t_acc)
 
 
@@ -431,8 +479,9 @@ def predict_put_replicate(w: SpmvWorkload, hw: HardwareParams) -> float:
     topo = w.topology
     per_node_shards = topo.shards_per_node
     contribs = float(w.rows_per_shard * w.r_nz)
-    t_acc = (contribs * (hw.elem + hw.cacheline)
-             + 2.0 * w.n * hw.elem) / hw.w_private
+    acc_grain = (hw.elem + hw.idx if w.use_kernel
+                 else hw.elem + hw.cacheline)
+    t_acc = (contribs * acc_grain + 2.0 * w.n * hw.elem) / hw.w_private
     local_vol = (per_node_shards - 1) * w.shard_size * hw.elem
     remote_vol = (w.n - per_node_shards * w.shard_size) * hw.elem
     t_comm = 2.0 * (
@@ -884,6 +933,10 @@ ERROR_BUDGET_WORKLOADS = {
     "spmv_skewed": 1.5,
     "moe_dispatch": 2.0,
     "gnn": 2.0,
+    # kernelized pack/unpack: interpret-mode pallas_call adds per-call
+    # dispatch overhead on CPU hosts that the kernel terms (priced for a
+    # real accelerator) deliberately do not carry
+    "spmv_kernel": 1.5,
 }
 
 # per-dtype multiplier: sub-f32 arithmetic is emulated on CPU hosts, so

@@ -20,8 +20,15 @@ registers the EllPack slot table as a ``Destination`` so each exchange
 lands directly in gather-slot order — O(slots + recv) per step, no
 full-length ``x_copy`` ever assembled; ``"full"`` keeps the paper's UPCv3
 layout (assemble ``mythread_x_copy``, then index it), bit-identical
-results.  The split-kernel paths (``use_kernel=True``) consume the
-assembled copy and therefore always run ``materialize="full"``.
+results.  With ``use_kernel=True`` the default is ``"full"`` (the split
+SpMV compute kernels consume the assembled copy, itself built by the
+fused unpack kernel); an explicit ``materialize="dest"`` instead routes
+the exchange through the kernelized dest-unpack (``kernels.unpack_dest``
+delivers the recv buffer straight into the EllPack slots) with the slot
+compute in jnp.  ``transpose=True`` with ``use_kernel=True`` runs the
+push-side split kernels: the own-target accumulate overlaps the in-flight
+collective, then the landed contributions fold in
+(``kernels.accumulate_segments`` / ``accumulate_into``).
 
 The ``overlap`` strategy uses the ``OverlapHandle`` protocol: issue the
 condensed ``all_to_all``, run the own-shard partial SpMV (which depends only
@@ -100,33 +107,22 @@ class DistributedSpMV:
         topology = Topology(p, shards_per_node or p)
         self.transpose = transpose
         if transpose:
-            if use_kernel:
-                # validated here, at construction, so a misconfigured
-                # engine can never be built and fail only on first call
-                raise NotImplementedError(
-                    "DistributedSpMV(transpose=True, use_kernel=True) is "
-                    "not supported: the split Pallas kernels consume the "
-                    "gather-direction x_copy and are not wired to the "
-                    "scatter-accumulate path.  Supported alternatives: "
-                    "transpose=True with use_kernel=False (jnp "
-                    "scatter-accumulate, any strategy= rung), or "
-                    "transpose=False with use_kernel=True (forward "
-                    "product through the split kernels).")
             assert materialize is None, (
                 "materialize= is a gather-unpack knob; the transposed "
                 "product always accumulates straight into the owned slice")
             self._init_transpose(matrix, mesh, axis_name=axis_name,
                                  strategy=strategy, blocksize=blocksize,
                                  topology=topology, hw=hw,
+                                 use_kernel=use_kernel,
                                  use_plan_cache=use_plan_cache)
             return
 
         if materialize is None:
+            # the split SpMV compute kernels consume the assembled copy, so
+            # the kernel default is "full"; an explicit materialize="dest"
+            # with use_kernel=True routes the exchange through the fused
+            # dest-unpack kernel instead (slot compute stays jnp)
             materialize = "full" if use_kernel else "dest"
-        if materialize == "dest" and use_kernel:
-            raise ValueError(
-                "the split-kernel paths consume the assembled x_copy; "
-                'use materialize="full" with use_kernel=True')
         assert materialize in ("dest", "full"), materialize
         self.materialize = materialize
         rows_per_shard = matrix.cols.shape[0] // p
@@ -153,7 +149,7 @@ class DistributedSpMV:
             axis_name=axis_name, strategy=strategy, blocksize=blocksize,
             topology=topology, destination=destination,
             dest_slots=rows_per_shard * matrix.cols.shape[1],
-            hw=hw, use_plan_cache=use_plan_cache,
+            hw=hw, use_kernel=use_kernel, use_plan_cache=use_plan_cache,
         )
         self.plan: CommPlan = self.gather.plan
         self.requested_strategy = strategy
@@ -183,7 +179,7 @@ class DistributedSpMV:
         gather = self.gather
         shard_size = self.plan.shard_size
 
-        if strategy == "overlap" and use_kernel:
+        if strategy == "overlap" and use_kernel and materialize == "full":
             from repro.kernels import ops as kops
             plan = self.plan
             own_fn, rem_fn, kargs = kops.make_spmv_overlap_sharded(
@@ -265,7 +261,7 @@ class DistributedSpMV:
                 return y_own + y_rem
 
             kernel_specs = (P(axis_name, None),) * 4
-        elif use_kernel:
+        elif use_kernel and materialize == "full":
             from repro.kernels import ops as kops
             kernel_local, kplan = kops.make_spmv_on_copy_sharded(
                 matrix.cols, p
@@ -327,7 +323,8 @@ class DistributedSpMV:
         self._step = step
 
     def _init_transpose(self, matrix, mesh, *, axis_name, strategy,
-                        blocksize, topology, hw, use_plan_cache):
+                        blocksize, topology, hw, use_kernel,
+                        use_plan_cache):
         """y = (D + A)ᵀ x via scatter-accumulate of partial products.
 
         Each shard forms its contributions ``vals * x_local[:, None]`` (its
@@ -335,13 +332,16 @@ class DistributedSpMV:
         diagonal term is purely local (Dᵀ = D).  The ``ScatterHandle``
         protocol issues the exchange first, so the diagonal product and the
         own-column accumulate run while the collective is in flight — the
-        ``overlap`` rung's window, available on every rung.
+        ``overlap`` rung's window, available on every rung.  With
+        ``use_kernel=True`` the pack-accumulate, the own-target accumulate
+        and the landed-contribution fold each run as one fused Pallas pass
+        (push-side split kernels), bit-identical to the jnp path.
         """
         scatter = IrregularScatter(
             AccessPattern.from_ellpack(matrix), mesh,
             axis_name=axis_name, strategy=strategy, blocksize=blocksize,
             topology=topology, reduce="add", hw=hw,
-            use_plan_cache=use_plan_cache,
+            use_kernel=use_kernel, use_plan_cache=use_plan_cache,
         )
         self.scatter = scatter
         self.gather = None

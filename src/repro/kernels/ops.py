@@ -14,15 +14,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import pack_gather as _pg
 from repro.kernels import ref as kref
 from repro.kernels.ellpack_spmv import ellpack_spmv_windowed
-from repro.kernels.pack_gather import pack_gather as _pack_gather_kernel
 from repro.kernels.stencil2d import stencil2d as _stencil2d_kernel
 
 __all__ = [
     "on_tpu", "plan_spmv_windows", "ellpack_spmv", "make_spmv_on_copy_sharded",
-    "make_spmv_overlap_sharded", "pack_gather", "stencil2d",
-    "decode_attention",
+    "make_spmv_overlap_sharded", "pack_gather", "unpack_dest",
+    "unpack_scatter_set", "accumulate_segments", "accumulate_into",
+    "stencil2d", "decode_attention",
 ]
 
 
@@ -257,25 +258,76 @@ def make_spmv_overlap_sharded(plan, vals: np.ndarray, *,
 
 
 # --------------------------------------------------------------------------
-# Message packing
+# Exchange fast path: pack / unpack / segment-accumulate
 # --------------------------------------------------------------------------
 
 _VMEM_SHARD_LIMIT = 8 * 1024 * 1024  # bytes; half of v5e VMEM
 
-def pack_gather(x, idx, *, block: int = 1024, interpret=None):
+
+def _fits_vmem(*arrays) -> bool:
+    return all(a.size * a.dtype.itemsize <= _VMEM_SHARD_LIMIT
+               for a in arrays)
+
+
+def pack_gather(x, idx, *, block: int | None = None, interpret=None):
     """out[k] = x[idx[k]] with the shard VMEM-resident; ref fallback if the
-    shard exceeds the VMEM budget."""
+    shard exceeds the VMEM budget.  Handles trailing feature dims and any
+    message count (padding is internal to the kernel)."""
     interpret = _interpret_default(interpret)
-    if x.size * x.dtype.itemsize > _VMEM_SHARD_LIMIT:
+    if not _fits_vmem(x):
         return kref.pack_gather_ref(x, idx)
-    m = idx.shape[0]
-    block = min(block, m) if m else 1
-    if m == 0:
-        return jnp.zeros((0,), x.dtype)
-    padded = int(np.ceil(m / block)) * block
-    idx_p = jnp.pad(idx, (0, padded - m))
-    out = _pack_gather_kernel(x, idx_p, block=block, interpret=interpret)
-    return out[:m]
+    return _pg.pack_gather(x, idx, block=block, interpret=interpret)
+
+
+def unpack_dest(recv_flat, x_local, src_idx, own_idx, own_mask, rem_mask,
+                *, block: int | None = None, interpret=None):
+    """Fused Destination-targeted unpack: recv buffer + owned shard straight
+    into the L consumer slots (see kernels/pack_gather.py)."""
+    interpret = _interpret_default(interpret)
+    if not _fits_vmem(recv_flat, x_local):
+        return kref.unpack_dest_ref(recv_flat, x_local, src_idx, own_idx,
+                                    own_mask, rem_mask)
+    return _pg.unpack_dest(recv_flat, x_local, src_idx, own_idx, own_mask,
+                           rem_mask, block=block, interpret=interpret)
+
+
+def unpack_scatter_set(recv, idx, x_own, offset, *, out_len: int,
+                       copy_own: bool = True, interpret=None):
+    """Fused full-materialization unpack (eq.-15 scatter + eq.-14 own
+    memcpy); ref fallback when the assembled copy exceeds the VMEM budget."""
+    interpret = _interpret_default(interpret)
+    rest_elems = int(np.prod(x_own.shape[1:], dtype=np.int64)) or 1
+    out_bytes = out_len * rest_elems * x_own.dtype.itemsize
+    if out_bytes > _VMEM_SHARD_LIMIT or not _fits_vmem(recv, x_own):
+        return kref.unpack_scatter_set_ref(recv, idx, x_own, offset,
+                                           out_len=out_len,
+                                           copy_own=copy_own)
+    return _pg.unpack_scatter_set(recv, idx, x_own, offset, out_len=out_len,
+                                  copy_own=copy_own, interpret=interpret)
+
+
+def accumulate_segments(vals, idx, *, out_len: int, reduce: str = "add",
+                        interpret=None):
+    """Segment-combine from the reduce identity (put-direction pack and
+    own-target accumulate); ref fallback past the VMEM budget."""
+    interpret = _interpret_default(interpret)
+    rest_elems = int(np.prod(vals.shape[1:], dtype=np.int64)) or 1
+    out_bytes = out_len * rest_elems * vals.dtype.itemsize
+    if out_bytes > _VMEM_SHARD_LIMIT or not _fits_vmem(vals):
+        return kref.accumulate_segments_ref(vals, idx, out_len=out_len,
+                                            reduce=reduce)
+    return _pg.accumulate_segments(vals, idx, out_len=out_len, reduce=reduce,
+                                   interpret=interpret)
+
+
+def accumulate_into(init, vals, idx, *, reduce: str = "add", interpret=None):
+    """Combine landed contributions into a prior accumulator (the second
+    half of the push-side split); ref fallback past the VMEM budget."""
+    interpret = _interpret_default(interpret)
+    if not _fits_vmem(init, vals):
+        return kref.accumulate_into_ref(init, vals, idx, reduce=reduce)
+    return _pg.accumulate_into(init, vals, idx, reduce=reduce,
+                               interpret=interpret)
 
 
 # --------------------------------------------------------------------------

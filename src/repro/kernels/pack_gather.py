@@ -1,44 +1,305 @@
-"""Pallas TPU kernel for message packing (paper Listing 5, the pack loop).
+"""Pallas kernels for the exchange fast path (paper Listing 5, both loops,
+both directions).
 
-``out[k] = x[idx[k]]`` — extracting the condensed message values from the
-owned shard into a contiguous send buffer.  The shard lives whole in VMEM
-(shards on the comm axis are small: n/P elements); the irregular gather is
-VMEM-local, which is the entire point of the paper's pack/unpack design —
-irregularity never touches the slow memory level.
+The paper's whole point is that once messages are condensed, what remains
+of the communication cost is the local pack/unpack around one exchange.
+These kernels make that remainder touch HBM once per element:
 
-Grid: (n_msg_blocks,) over the flattened padded message buffer.
+* ``pack_gather``        — ``out[k] = x[idx[k]]``: extract the condensed
+  message values from the owned shard into a contiguous send buffer.  The
+  shard lives whole in VMEM (shards on the comm axis are small: n/P
+  elements); the irregular gather is VMEM-local, which is the entire point
+  of the pack/unpack design — irregularity never touches the slow memory
+  level.  Handles trailing feature dims and pads the message count to a
+  block multiple internally.
+* ``unpack_dest``        — the Destination-targeted unpack: deliver the
+  landed recv buffer straight into the consumer's named slots, fusing the
+  foreign gather, the owned gather and the mask combine of
+  ``strategies.dest_gather_local`` into one pass over the L slots.
+* ``unpack_scatter_set`` — the full-materialization unpack: scatter the
+  landed messages into a fresh x_copy and (optionally) memcpy the owned
+  shard in, in one kernel — the gather direction's eq.-14/15 fused.
+* ``accumulate_segments`` / ``accumulate_into`` — the put direction's
+  segment-combine: fold contributions into an accumulator under
+  ``reduce="add"|"set"|"max"`` semantics.  ``accumulate_segments`` starts
+  from the reduce identity (the pack-side message combine and the
+  own-target accumulate); ``accumulate_into`` continues from a prior
+  accumulator (the landed-foreign combine of the push-side split — the
+  own-accumulate kernel runs while the all_to_all is in flight, then this
+  kernel folds the landed messages into its result).
+
+Bit-identity contract: every kernel body executes the *same jnp op
+sequence* as the pure-jnp strategy path (``repro.comm.strategies``), and
+the accumulate kernels run on a single-program grid so the scatter-combine
+order is identical too.  In interpret mode (the default off-TPU) the body
+lowers to the very same XLA ops — kernel and jnp rungs agree bit for bit,
+which the blocking test tier asserts across rungs × reduces × dtypes.
+
+Gather-style kernels (``pack_gather``, ``unpack_dest``) are
+order-independent, so they block over the message/slot axis; the
+accumulate kernels keep ``grid=(1,)`` semantics (whole-array blocks) so
+duplicate-index combines stay deterministic.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pack_gather"]
+__all__ = [
+    "pack_gather", "unpack_dest", "unpack_scatter_set",
+    "accumulate_segments", "accumulate_into", "reduce_identity",
+]
 
 
-def _kernel(x_ref, idx_ref, out_ref):
+def _interpret_default(interpret):
+    # interpret only off-TPU: on a TPU backend the same call sites compile
+    # to Mosaic; everywhere else the kernels run (and are tested) via the
+    # interpreter, which lowers the body to plain XLA ops
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def reduce_identity(dtype, reduce: str):
+    """The reduce identity padded lanes carry (mirrors
+    ``strategies._reduce_identity`` — duplicated so the kernel layer never
+    imports comm machinery)."""
+    if reduce == "max":
+        if jnp.issubdtype(dtype, jnp.floating):
+            return jnp.array(-jnp.inf, dtype)
+        return jnp.array(jnp.iinfo(dtype).min, dtype)
+    return jnp.array(0, dtype)
+
+
+def _combine(acc: jax.Array, idx: jax.Array, vals: jax.Array,
+             reduce: str) -> jax.Array:
+    if reduce == "max":
+        return acc.at[idx].max(vals)
+    return acc.at[idx].add(vals)
+
+
+# --------------------------------------------------------------------------
+# Pack (paper Listing 5 pack loop)
+# --------------------------------------------------------------------------
+
+def _pack_kernel(x_ref, idx_ref, out_ref):
     out_ref[...] = jnp.take(x_ref[...], idx_ref[...], axis=0)
 
 
 def pack_gather(
-    x: jax.Array,          # (shard,) owned values, fully VMEM-resident
-    idx: jax.Array,        # (m,) int32 local indices, padded
+    x: jax.Array,          # (shard, feat...) owned values, VMEM-resident
+    idx: jax.Array,        # (m,) int32 local indices
     *,
-    block: int = 1024,
-    interpret: bool = True,
+    block: int | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    """out[k] = x[idx[k]], blocked over the message axis.
+
+    ``m`` need not divide ``block``: the index buffer is padded internally
+    (padding gathers row 0, whose values are sliced off) and the result is
+    sliced back to ``m`` — callers never crash on odd message counts.
+    ``block=None`` picks 1024 compiled and the whole axis in interpret
+    mode (a grid buys nothing off-TPU: each extra step is just another
+    round of XLA slice ops).
+    """
+    interpret = _interpret_default(interpret)
     m = idx.shape[0]
-    assert m % block == 0, "pad the message buffer to a block multiple"
-    grid = (m // block,)
-    return pl.pallas_call(
-        _kernel,
-        grid=grid,
+    feat = x.shape[1:]
+    nf = len(feat)
+    if m == 0:
+        return jnp.zeros((0,) + feat, x.dtype)
+    if block is None:
+        block = m if interpret else 1024
+    block = min(block, m)
+    padded = -(-m // block) * block
+    idx_p = jnp.pad(idx, (0, padded - m)) if padded != m else idx
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid=(padded // block,),
         in_specs=[
-            pl.BlockSpec(x.shape, lambda i: (0,)),          # whole shard
+            pl.BlockSpec(x.shape, lambda i: (0,) * (1 + nf)),  # whole shard
             pl.BlockSpec((block,), lambda i: (i,)),
         ],
-        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        out_specs=pl.BlockSpec((block,) + feat,
+                               lambda i: (i,) + (0,) * nf),
+        out_shape=jax.ShapeDtypeStruct((padded,) + feat, x.dtype),
         interpret=interpret,
-    )(x, idx)
+    )(x, idx_p)
+    return out[:m] if padded != m else out
+
+
+# --------------------------------------------------------------------------
+# Destination-targeted unpack (fused strategies.dest_gather_local)
+# --------------------------------------------------------------------------
+
+def _dest_kernel(recv_ref, x_ref, src_ref, own_ref, own_m_ref, rem_m_ref,
+                 out_ref):
+    nf = len(x_ref.shape) - 1
+    dtype = x_ref.dtype
+    mshape = src_ref.shape + (1,) * nf
+    rem = jnp.take(recv_ref[...], src_ref[...], axis=0)
+    own = jnp.take(x_ref[...], own_ref[...], axis=0)
+    out_ref[...] = (rem * rem_m_ref[...].reshape(mshape).astype(dtype)
+                    + own * own_m_ref[...].reshape(mshape).astype(dtype))
+
+
+def unpack_dest(
+    recv_flat: jax.Array,   # (R, feat...) flattened landed recv buffer
+    x_local: jax.Array,     # (shard, feat...)
+    src_idx: jax.Array,     # (L,) recv_flat position of each foreign slot
+    own_idx: jax.Array,     # (L,) x_local position of each owned slot
+    own_mask: jax.Array,    # (L,) int8: 1 where the slot is owned
+    rem_mask: jax.Array,    # (L,) int8: 1 where the slot is foreign
+    *,
+    block: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Deliver landed values straight into the L named consumer slots.
+
+    One fused pass: each slot reads either the recv buffer (foreign), the
+    owned shard, or exactly 0.0 (both masks 0) — the full-length x_copy is
+    never built.  Recv buffer and shard are whole in VMEM; the slot axis
+    blocks (slots are written once each, so blocking is order-safe);
+    ``block=None`` picks 1024 compiled and the whole axis in interpret
+    mode, like ``pack_gather``.
+    """
+    interpret = _interpret_default(interpret)
+    L = src_idx.shape[0]
+    feat = x_local.shape[1:]
+    nf = len(feat)
+    if L == 0:
+        return jnp.zeros((0,) + feat, x_local.dtype)
+    if block is None:
+        block = L if interpret else 1024
+    block = min(block, L)
+    padded = -(-L // block) * block
+    if padded != L:
+        pad = (0, padded - L)
+        src_idx = jnp.pad(src_idx, pad)
+        own_idx = jnp.pad(own_idx, pad)
+        own_mask = jnp.pad(own_mask, pad)     # pad slots read exactly 0.0
+        rem_mask = jnp.pad(rem_mask, pad)
+    out = pl.pallas_call(
+        _dest_kernel,
+        grid=(padded // block,),
+        in_specs=[
+            pl.BlockSpec(recv_flat.shape, lambda i: (0,) * (1 + nf)),
+            pl.BlockSpec(x_local.shape, lambda i: (0,) * (1 + nf)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,) + feat,
+                               lambda i: (i,) + (0,) * nf),
+        out_shape=jax.ShapeDtypeStruct((padded,) + feat, x_local.dtype),
+        interpret=interpret,
+    )(recv_flat, x_local, src_idx, own_idx, own_mask, rem_mask)
+    return out[:L] if padded != L else out
+
+
+# --------------------------------------------------------------------------
+# Full-materialization unpack (fused eq. 14 own-copy + eq. 15 scatter)
+# --------------------------------------------------------------------------
+
+def _unpack_set_kernel(recv_ref, x_ref, idx_ref, off_ref, out_ref, *,
+                       copy_own: bool):
+    nrest = len(x_ref.shape) - 1
+    x_copy = jnp.zeros(out_ref.shape, x_ref.dtype)
+    x_copy = x_copy.at[idx_ref[...]].set(recv_ref[...])
+    if copy_own:
+        x_copy = jax.lax.dynamic_update_slice(
+            x_copy, x_ref[...], (off_ref[0],) + (0,) * nrest)
+    out_ref[...] = x_copy
+
+
+def unpack_scatter_set(
+    recv: jax.Array,      # (R, rest...) landed messages (flattened pairs)
+    idx: jax.Array,       # (R,) destination row of each landed message
+    x_own: jax.Array,     # (rows_own, rest...) the owned values to memcpy in
+    offset: jax.Array,    # scalar int32: own-copy start row (me * rows_own)
+    *,
+    out_len: int,
+    copy_own: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x_copy = zeros((out_len,) + rest); x_copy[idx] = recv; then the
+    eq.-14 own-shard memcpy at ``offset`` — the condensed/blockwise full
+    unpack as ONE kernel (rows are whole virtual blocks for blockwise).
+
+    Single-program grid: the scatter-set and the own memcpy execute in the
+    same order as the jnp path, so duplicate dump-row writes and the
+    own/recv overlap resolve identically.
+    """
+    interpret = _interpret_default(interpret)
+    rest = x_own.shape[1:]
+    off = jnp.asarray(offset, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        functools.partial(_unpack_set_kernel, copy_own=copy_own),
+        out_shape=jax.ShapeDtypeStruct((out_len,) + rest, x_own.dtype),
+        interpret=interpret,
+    )(recv, x_own, idx, off)
+
+
+# --------------------------------------------------------------------------
+# Segment accumulate (put direction: pack-combine and accumulate-unpack)
+# --------------------------------------------------------------------------
+
+def _segsum_kernel(vals_ref, idx_ref, out_ref, *, reduce: str):
+    vals = vals_ref[...]
+    acc = jnp.full(out_ref.shape, reduce_identity(vals.dtype, reduce),
+                   vals.dtype)
+    out_ref[...] = _combine(acc, idx_ref[...], vals, reduce)
+
+
+def accumulate_segments(
+    vals: jax.Array,      # (K, rest...) contributions
+    idx: jax.Array,       # (K,) destination row of each contribution
+    *,
+    out_len: int,
+    reduce: str = "add",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """acc = full((out_len,) + rest, identity); combine vals at idx.
+
+    The put direction's segment-combine: the sender-side message pack
+    (12ᵀ), the own-target accumulate (the half of 15ᵀ that needs no landed
+    data — issue it while the all_to_all flies), and the blockwise block
+    combine are all this kernel at different ``out_len``.  ``reduce`` set
+    semantics are realized by the caller pre-masking (the plan's winner
+    mask), exactly like the jnp path.
+    """
+    interpret = _interpret_default(interpret)
+    rest = vals.shape[1:]
+    return pl.pallas_call(
+        functools.partial(_segsum_kernel, reduce=reduce),
+        out_shape=jax.ShapeDtypeStruct((out_len,) + rest, vals.dtype),
+        interpret=interpret,
+    )(vals, idx)
+
+
+def _accinto_kernel(init_ref, vals_ref, idx_ref, out_ref, *, reduce: str):
+    out_ref[...] = _combine(init_ref[...], idx_ref[...], vals_ref[...],
+                            reduce)
+
+
+def accumulate_into(
+    init: jax.Array,      # (out_len, rest...) prior accumulator
+    vals: jax.Array,      # (K, rest...) landed contributions
+    idx: jax.Array,       # (K,) destination row of each contribution
+    *,
+    reduce: str = "add",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Combine ``vals`` into an existing accumulator (the landed-foreign
+    half of the push-side split: takes the own-accumulate kernel's output,
+    which the scheduler computed while the collective was in flight)."""
+    interpret = _interpret_default(interpret)
+    return pl.pallas_call(
+        functools.partial(_accinto_kernel, reduce=reduce),
+        out_shape=jax.ShapeDtypeStruct(init.shape, init.dtype),
+        interpret=interpret,
+    )(init, vals, idx)

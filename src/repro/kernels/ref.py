@@ -8,8 +8,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ellpack_spmv_ref", "pack_gather_ref", "stencil2d_ref",
+__all__ = ["ellpack_spmv_ref", "pack_gather_ref", "unpack_dest_ref",
+           "unpack_scatter_set_ref", "accumulate_segments_ref",
+           "accumulate_into_ref", "stencil2d_ref",
            "decode_attention_ref", "selective_scan_ref"]
+
+
+def _reduce_identity(dtype, reduce):
+    if reduce == "max":
+        if jnp.issubdtype(dtype, jnp.floating):
+            return jnp.array(-jnp.inf, dtype)
+        return jnp.array(jnp.iinfo(dtype).min, dtype)
+    return jnp.array(0, dtype)
+
+
+def _combine(acc, idx, vals, reduce):
+    if reduce == "max":
+        return acc.at[idx].max(vals)
+    return acc.at[idx].add(vals)
 
 
 def ellpack_spmv_ref(diag, vals, cols, x):
@@ -25,6 +41,50 @@ def ellpack_spmv_ref(diag, vals, cols, x):
 def pack_gather_ref(x, idx):
     """Message packing (paper Listing 5 pack loop): out[k] = x[idx[k]]."""
     return x[idx]
+
+
+def unpack_dest_ref(recv_flat, x_local, src_idx, own_idx, own_mask,
+                    rem_mask):
+    """Destination-targeted unpack (strategies.dest_gather_local): each of
+    the L consumer slots reads the landed recv buffer (foreign), the owned
+    shard, or 0.0 (both masks zero)."""
+    nf = x_local.ndim - 1
+    dtype = x_local.dtype
+
+    def bmask(m):
+        return m.reshape(m.shape + (1,) * nf).astype(dtype)
+
+    return (recv_flat[src_idx] * bmask(rem_mask)
+            + x_local[own_idx] * bmask(own_mask))
+
+
+def unpack_scatter_set_ref(recv, idx, x_own, offset, *, out_len,
+                           copy_own=True):
+    """Full-materialization unpack: zeros((out_len,)+rest), scatter-set the
+    landed messages, then memcpy the owned rows in at ``offset``."""
+    rest = x_own.shape[1:]
+    x_copy = jnp.zeros((out_len,) + rest, x_own.dtype)
+    x_copy = x_copy.at[idx].set(recv)
+    if copy_own:
+        x_copy = jax.lax.dynamic_update_slice(
+            x_copy, x_own, (offset,) + (0,) * len(rest))
+    return x_copy
+
+
+def accumulate_segments_ref(vals, idx, *, out_len, reduce="add"):
+    """acc = full((out_len,)+rest, identity); combine vals at idx (the put
+    direction's segment-combine under add/set/max semantics; ``set`` is
+    add-after-winner-masking, exactly like the strategy path)."""
+    rest = vals.shape[1:]
+    acc = jnp.full((out_len,) + rest,
+                   _reduce_identity(vals.dtype, reduce), vals.dtype)
+    return _combine(acc, idx, vals, reduce)
+
+
+def accumulate_into_ref(init, vals, idx, *, reduce="add"):
+    """Combine vals into an existing accumulator (landed-foreign half of the
+    push-side split)."""
+    return _combine(init, idx, vals, reduce)
 
 
 def stencil2d_ref(x, coef):

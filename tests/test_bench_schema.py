@@ -71,22 +71,44 @@ def test_unreadable_file(tmp_path):
     assert check_file(str(path))
 
 
-# -- table3: telemetry + dynamic rows --
+# -- table3: telemetry + dynamic rows + kernel rows --
+
+def _kernel_rows(derived="predicted_us=9.1 accuracy=0.9 vs_jnp=0.98x"):
+    return [{"name": "table3.kernel.gather.condensed", "us_per_call": 2.0,
+             "derived": derived}]
+
 
 def test_table3_valid(tmp_path):
     doc = {"bench": "table3", "smoke": True,
-           "rows": _rows("table3.dynamic.r"),
+           "rows": _rows("table3.dynamic.r") + _kernel_rows(),
            "telemetry": _telemetry()}
     assert check_file(_write(tmp_path, doc)) == []
 
 
 def test_table3_requires_telemetry_and_dynamic_rows(tmp_path):
     doc = {"bench": "table3", "smoke": True,
-           "rows": _rows("table3.dynamic.r")}
+           "rows": _rows("table3.dynamic.r") + _kernel_rows()}
     assert any("telemetry" in e for e in check_file(_write(tmp_path, doc)))
-    doc = {"bench": "table3", "smoke": True, "rows": _rows("table3.x"),
+    doc = {"bench": "table3", "smoke": True,
+           "rows": _rows("table3.x") + _kernel_rows(),
            "telemetry": _telemetry()}
     assert any("dynamic" in e for e in check_file(_write(tmp_path, doc)))
+
+
+def test_table3_requires_kernel_rows(tmp_path):
+    doc = {"bench": "table3", "smoke": True,
+           "rows": _rows("table3.dynamic.r"),
+           "telemetry": _telemetry()}
+    assert any("table3.kernel" in e
+               for e in check_file(_write(tmp_path, doc)))
+
+
+def test_table3_kernel_rows_need_prediction_columns(tmp_path):
+    for derived in ("vs_jnp=1.00x", "predicted_us=9.1", "neither"):
+        doc = {"bench": "table3", "smoke": True,
+               "rows": _rows("table3.dynamic.r") + _kernel_rows(derived),
+               "telemetry": _telemetry()}
+        assert any("vs_jnp" in e for e in check_file(_write(tmp_path, doc)))
 
 
 def test_table3_rejects_inconsistent_telemetry(tmp_path):

@@ -452,16 +452,20 @@ def test_hw_memo_keys_and_clearing(monkeypatch):
 
 
 # --------------------------------------------------------------------------
-# satellite: transpose + use_kernel rejected at construction
+# transpose + use_kernel: the push-side split kernels (formerly rejected)
 # --------------------------------------------------------------------------
 
-def test_spmv_transpose_kernel_rejected_at_construction():
+def test_spmv_transpose_kernel_matches_jnp():
     from repro.core.matrix import make_mesh_like_matrix
     from repro.core.spmv import DistributedSpMV
 
     mesh, ndev = _mesh()
     n = 16 * ndev
     m = make_mesh_like_matrix(n, 2, locality_window=n // 4, seed=9)
-    with pytest.raises(NotImplementedError,
-                       match="use_kernel=False"):
-        DistributedSpMV(m, mesh, transpose=True, use_kernel=True)
+    x = np.random.default_rng(9).standard_normal(n).astype(np.float32)
+    ys = {}
+    for uk in (False, True):
+        eng = DistributedSpMV(m, mesh, transpose=True, use_kernel=uk,
+                              use_plan_cache=False)
+        ys[uk] = np.asarray(eng(eng.shard_vector(x)))
+    np.testing.assert_array_equal(ys[True], ys[False])
