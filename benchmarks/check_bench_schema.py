@@ -17,6 +17,11 @@ per-PR trajectory.  Checked, per file:
   ``predicted_us=`` and ``vs_jnp=`` in ``derived``);
 * table5 must include the ``table5.scan.*`` rows (the persistent
   scan-window loops — heat2d + CG — actually ran);
+* ``BENCH_serve.json`` (the continuous-batching serving bench) must carry
+  a ``table_serve.engine.*`` row with ``tokens_per_s=`` and one with
+  ``p99_us=`` in ``derived``, plus ``table_serve.decode_step.*`` rows each
+  carrying ``predicted_us=``, ``model_error=`` and ``within_budget=`` (the
+  §5 decode-regime predictions the serve bench gates on);
 * ``BENCH_matrix.json`` carries the per-cell ``cells`` records of the
   config-driven benchmark matrix: workload/rung/dtype strings, a
   positive-int mesh shape, non-negative measured/predicted/error numbers,
@@ -135,6 +140,31 @@ def check_matrix_cells(doc: dict, errors: list, path: str) -> None:
                           f"{PLAN_SOURCES}, got {cell.get('plan_source')!r}")
 
 
+def check_serve_rows(doc: dict, errors: list, path: str) -> None:
+    rows = [r for r in doc.get("rows", []) if isinstance(r, dict)]
+    engine = [r for r in rows
+              if str(r.get("name", "")).startswith("table_serve.engine.")]
+    if not any("tokens_per_s=" in str(r.get("derived", "")) for r in engine):
+        errors.append(f"{path}: serve needs a table_serve.engine.* row "
+                      "carrying tokens_per_s= (throughput)")
+    if not any("p99_us=" in str(r.get("derived", "")) for r in engine):
+        errors.append(f"{path}: serve needs a table_serve.engine.* row "
+                      "carrying p99_us= (tail per-token latency)")
+    steps = [r for r in rows
+             if str(r.get("name", "")).startswith("table_serve.decode_step.")]
+    if not steps:
+        errors.append(f"{path}: missing table_serve.decode_step.* rows "
+                      "(§5 decode-regime predicted-vs-measured)")
+    for r in steps:
+        derived = str(r.get("derived", ""))
+        missing = [k for k in ("predicted_us=", "model_error=",
+                               "within_budget=") if k not in derived]
+        if missing:
+            errors.append(f"{path}: {r.get('name')}: decode_step rows must "
+                          f"carry {', '.join(missing)} in 'derived', got "
+                          f"{derived!r}")
+
+
 def check_file(path: str) -> list:
     errors: list = []
     try:
@@ -175,6 +205,8 @@ def check_file(path: str) -> list:
         if not any(n.startswith("table5.scan.") for n in names):
             errors.append(f"{path}: missing table5.scan.* rows "
                           "(persistent scan-window loops)")
+    if bench == "serve":
+        check_serve_rows(doc, errors, path)
     if bench == "matrix":
         check_matrix_cells(doc, errors, path)
     return errors

@@ -72,6 +72,7 @@ def main() -> None:
         "fig2": tables.fig2_volumes,
         "table5": tables.table5_heat2d,
         "roofline": tables.roofline_report,
+        "serve": tables.table_serve,
         "matrix": None,  # dispatched below: writes its own JSON + gates
     }
     if not which:
@@ -91,7 +92,7 @@ def main() -> None:
             fn(smoke=True)
         else:
             fn()
-        if name in ("table3", "table5") and smoke:
+        if name in ("table3", "table5", "serve") and smoke:
             _write_bench_json(name, common.drain_rows(), smoke)
     if violations:
         print(f"# FAIL: {len(violations)} matrix cell(s) exceed their "

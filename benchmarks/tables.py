@@ -532,6 +532,126 @@ def table3_dynamic(smoke=False, iters=50):
 
 
 # --------------------------------------------------------------------------
+# Table serve: the continuous-batching engine (repro.serve) + §5-priced MoE
+# decode exchanges.  Engine rows report tokens/s and p50/p99 per-token
+# latency with the steady-state zero-host-build telemetry assertion; the
+# decode_step rows compare a measured DynamicMoELayer step against
+# perfmodel.predict_decode_step (the eqs. 12δ–15δ latency floors) at decode
+# batch sizes {1, 8, 32}, each gated by perfmodel.error_budget.
+# --------------------------------------------------------------------------
+
+def table_serve(smoke=False, iters=30):
+    import dataclasses as _dc
+
+    from repro.comm import select
+    from repro.configs.registry import get_config
+    from repro.core import tune
+    from repro.models import moe as M
+    from repro.models.transformer import Model, RunCtx
+    from repro.serve import Request, ServeEngine
+
+    mesh = _mesh8()
+    slots = 8
+    cfg = get_config("mixtral-8x22b", reduced=True)
+    # serving shape: experts divide the 8-way mesh, full attention (SWA
+    # would clamp the ring cache), no-drop capacity so the engine matches
+    # the batch-loop baseline bit-exactly (tests/test_serve.py)
+    cfg = _dc.replace(cfg, num_experts=8, swa_window=0,
+                      capacity_factor=8.0 / cfg.experts_per_token)
+    ctx = RunCtx(remat="none", act_dtype=jnp.float32)
+    model = Model(cfg, ctx)
+    params = model.init_params(jax.random.PRNGKey(0))
+    print(f"# table_serve: continuous batching on {cfg.name} reduced "
+          f"(slots={slots}, experts={cfg.num_experts}, "
+          f"layers={cfg.num_layers})")
+
+    d = cfg.d_model
+    hw_tok = tune.measure_hardware(mesh, "data").replace(elem=4 * d)
+    cap = M.moe_capacity(slots, cfg)
+    moe_p = params["layers"]["moe"]
+    weights = {"w1": np.asarray(moe_p["w1"][0]),
+               "w2": np.asarray(moe_p["w2"][0])}
+    if "w3" in moe_p:
+        weights["w3"] = np.asarray(moe_p["w3"][0])
+    tmpl_e, _ = M.random_router(0, slots, cfg.num_experts,
+                                cfg.experts_per_token)
+    layer = M.DynamicMoELayer(weights, tmpl_e, slots, cfg.num_experts, cap,
+                              mesh, act=cfg.act, strategy="auto",
+                              shards_per_node=1, hw=hw_tok, decode=True)
+
+    engine = ServeEngine(model, params, num_slots=slots, cache_len=48,
+                         prefill_chunk=8, moe_layer=layer,
+                         cache_dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+
+    def submit(n, tag, gen):
+        for i in range(n):
+            engine.submit(Request(
+                id=f"{tag}{i}",
+                prompt=rng.integers(0, cfg.vocab_size, (16,)).tolist(),
+                max_new_tokens=gen, arrival_time=float(i // 4)))
+
+    submit(slots, "warm", 4)        # warmup: prefill/insert/decode traces
+    engine.run()
+    rep0 = engine.report()          # warmup watermark (compile ticks)
+    snap = engine.snapshot()
+    n_req, gen = (8, 6) if smoke else (24, 16)
+    submit(n_req, "req", gen)
+    rep = engine.run()
+    # acceptance: zero host plan builds across the steady-state run
+    delta = engine.assert_steady_state(snap)
+    # steady-state slices: everything after the warmup watermark, so the
+    # latency percentiles describe serving, not tracing/compilation
+    tick_ss = rep.tick_seconds[rep0.ticks:]
+    tok_ss = rep.token_seconds[len(rep0.token_seconds):]
+    csv_row("table_serve.engine.decode", float(np.mean(tick_ss)) * 1e6,
+            f"tokens_per_s={len(tok_ss)/sum(tick_ss):.1f} "
+            f"p50_us={np.percentile(tok_ss, 50)*1e6:.0f} "
+            f"p99_us={np.percentile(tok_ss, 99)*1e6:.0f} "
+            f"requests={n_req} ticks={len(tick_ss)} "
+            "telemetry=" + "/".join(f"{k}:{v}" for k, v in delta.items()))
+    ttft = sorted(t for rid, t in rep.ttft_seconds.items()
+                  if rid.startswith("req"))
+    csv_row("table_serve.engine.prefill", float(np.mean(ttft)) * 1e6,
+            f"ttft_p50_us={np.median(ttft)*1e6:.0f} requests={len(ttft)} "
+            f"chunks={delta['prefill_chunks']}")
+
+    # -- per-decode-step §5 pricing at decode batch sizes {1, 8, 32} --
+    for b in (1, 8, 32):
+        lanes = max(b, 8)           # DynamicMoELayer needs lanes % 8 == 0
+        cap_b = M.moe_capacity(lanes, cfg)
+        te, tw = M.random_router(b, lanes, cfg.num_experts,
+                                 cfg.experts_per_token)
+        lb = M.DynamicMoELayer(weights, te, lanes, cfg.num_experts, cap_b,
+                               mesh, act=cfg.act, strategy="auto",
+                               shards_per_node=1, hw=hw_tok, decode=True)
+        x = lb.shard_tokens(
+            rng.standard_normal((lanes, d)).astype(np.float32))
+        jax.block_until_ready(lb(x, te, tw))
+        t_meas = timeit(lb, x, te, tw, iters=(5 if smoke else iters))
+        gs, ss = lb.strategies["dispatch"], lb.strategies["combine"]
+        w_g = select.workload_from_plan(lb.gather.plan, 1,
+                                        materialize="full")
+        w_s = select.workload_from_plan(lb.scatter.splan, 1)
+        pred = pm.predict_decode_step(
+            [("dispatch", "get", w_g, gs), ("combine", "put", w_s, ss)],
+            hw_tok)
+        t_pred = pred["total"] + lb.plan_time
+        err = pm.model_error(t_meas, t_pred)
+        budget = pm.error_budget({"rung": gs, "workload": "moe_decode",
+                                  "dtype": "float32", "mesh": [8]})
+        ok = err <= budget
+        pad = "" if b == lanes else f" (b={b} padded to {lanes} lanes)"
+        csv_row(f"table_serve.decode_step.b{b}", t_meas * 1e6,
+                f"lanes={lanes}{pad} strategies={gs}+{ss} "
+                f"predicted_us={t_pred*1e6:.1f} model_error={err:.3f} "
+                f"budget={budget:.0f} within_budget={ok} latency_bound="
+                + (",".join(pred["latency_bound"]) or "none"))
+        assert ok, (f"decode-step model error {err:.2f} exceeds budget "
+                    f"{budget:.0f} at b={b}")
+
+
+# --------------------------------------------------------------------------
 # Table 4: measured vs predicted with calibrated host parameters
 # --------------------------------------------------------------------------
 

@@ -148,12 +148,17 @@ class IrregularExchange:
         scan_steps: int | None = None,
         plan_cost: float = 0.0,
         use_kernel: bool = False,
+        decode: bool = False,
     ):
         # ``use_kernel`` swaps the jnp pack/unpack around the collective for
         # the fused Pallas kernels (repro.kernels), bit-identical on every
         # rung; the §5 ranking prices the kernelized compute terms so
-        # strategy="auto" stays honest either way
+        # strategy="auto" stays honest either way.  ``decode`` prices the
+        # rungs for a token-by-token serving step instead (the eqs. 12δ–15δ
+        # α/latency floors via predict_decode_exchange) — at decode batch
+        # sizes the per-message τ terms decide the ladder, not the volumes
         self.use_kernel = use_kernel
+        self.decode = decode
         if isinstance(where, SharedVector):
             assert where.n == pattern.n, (where.n, pattern.n)
             mesh = where.mesh
@@ -255,7 +260,7 @@ class IrregularExchange:
                 self._ranking_plan(base_plan), pattern.r, hw,
                 candidates=candidates, direction=self.direction,
                 scan_steps=scan_steps, plan_cost=plan_cost,
-                **self._price_kwargs())
+                decode=decode, **self._price_kwargs())
             self.predicted_times = dict(ranked)
             strategy = ranked[0][0]
         self.strategy = strategy

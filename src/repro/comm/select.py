@@ -79,6 +79,7 @@ def rank_strategies(
     scan_steps: int | None = None,
     overlap_credit: float = 0.0,
     plan_cost: float = 0.0,
+    decode: bool = False,
 ) -> list[tuple[str, float]]:
     """[(strategy, predicted_seconds)] sorted fastest-first (§5 formulas).
 
@@ -110,6 +111,14 @@ def rank_strategies(
     per iteration.  It closes the "is replanning worth it this step?"
     question: rank once with the rebuild's ``T_plan`` and once with the
     reuse tier's, and compare (``perfmodel.replan_break_even_steps``).
+
+    ``decode=True`` prices each rung for a token-by-token decode step
+    (``perfmodel.predict_decode_exchange``: max of the β throughput model
+    and the tiny-m α/latency floor, eqs. 12δ–15δ).  The floor can only
+    raise a rung's prediction, so throughput-regime rankings are
+    untouched — but at decode batch sizes the per-message τ terms decide
+    the ladder, which is exactly what keeps ``strategy="auto"`` honest
+    for serving workloads.
     """
     pm = _perfmodel()
     if direction not in ("get", "put"):
@@ -120,6 +129,10 @@ def rank_strategies(
                   else pm.STRATEGY_PREDICTORS)
     names = tuple(candidates) if candidates else tuple(predictors)
     ranked = [(name, float(predictors[name](w, hw))) for name in names]
+    if decode:
+        ranked = [(name, pm.predict_decode_exchange(
+            w, hw, strategy=name, direction=direction))
+            for name, _ in ranked]
     if scan_steps is not None:
         setup = pm.window_setup_time(w.topology, hw)
         ranked = [(name, pm.scan_loop_cost(t, setup, scan_steps,

@@ -23,17 +23,31 @@ happened.  The counters are surfaced as the ``telemetry`` block of
 Thread-safe like ``plan_cache.CacheStats`` (bump under a lock); tests use
 ``isolated()`` instead of mutating the module-global ``stats``.
 
+Beyond the plan sources, a second counter group ticks the *serving loop*
+(``TICK_KINDS``): the continuous-batching engine (``repro.serve``) bumps
+``decode_steps`` once per jitted decode tick and ``prefill_chunks`` once
+per prefill chunk, so "zero host plan-builds during steady-state decode"
+is an assertable interval fact: snapshot, run N ticks, check
+``since(snap)`` shows ``decode_steps >= N`` and ``host-build == 0``
+(``decode_host_free`` packages exactly that).
+
 >>> from repro.comm import telemetry
 >>> with telemetry.isolated() as t:
 ...     telemetry.record("host-build", seconds=0.25)   # warmup
-...     telemetry.record("device-derive")
-...     telemetry.record("device-derive")
 ...     snap = t.snapshot()
->>> snap["sources"]["device-derive"], snap["sources"]["host-build"]
+...     telemetry.record("device-derive")
+...     telemetry.record("device-derive")
+...     telemetry.record_tick("decode_steps")
+>>> t.snapshot()["sources"]["device-derive"], t.snapshot()["sources"]["host-build"]
 (2, 1)
->>> snap["build_seconds"]["host-build"]
+>>> t.snapshot()["build_seconds"]["host-build"]
 0.25
 >>> t.host_free(warmup=1)   # after the 1-record warmup, no host builds
+True
+>>> delta = t.since(snap)
+>>> delta["host-build"], delta["decode_steps"]
+(0, 1)
+>>> t.decode_host_free(snap)   # >=1 decode tick, 0 host builds since snap
 True
 """
 from __future__ import annotations
@@ -41,7 +55,8 @@ from __future__ import annotations
 import contextlib
 import threading
 
-__all__ = ["PLAN_SOURCES", "PlanTelemetry", "stats", "record", "isolated"]
+__all__ = ["PLAN_SOURCES", "TICK_KINDS", "PlanTelemetry", "stats", "record",
+           "record_tick", "isolated"]
 
 # Ordered from cheapest to most expensive way of obtaining a plan.
 PLAN_SOURCES = ("memory-hit", "disk-hit", "bucket-reuse", "device-derive",
@@ -50,6 +65,11 @@ PLAN_SOURCES = ("memory-hit", "disk-hit", "bucket-reuse", "device-derive",
 # Sources that never touch the host O(nnz) preparation step after warmup.
 HOT_PATH_SOURCES = ("memory-hit", "disk-hit", "bucket-reuse",
                     "device-derive")
+
+# Serving-loop tick counters (repro.serve): one bump per jitted decode
+# tick / per prefill chunk — the denominator for "zero host builds while
+# the loop was actually decoding".
+TICK_KINDS = ("decode_steps", "prefill_chunks")
 
 
 class PlanTelemetry:
@@ -63,6 +83,7 @@ class PlanTelemetry:
         with getattr(self, "_lock", threading.Lock()):
             self.sources = {s: 0 for s in PLAN_SOURCES}
             self.build_seconds = {s: 0.0 for s in PLAN_SOURCES}
+            self.ticks = {k: 0 for k in TICK_KINDS}
             self.events: list[str] = []   # sources in record order
 
     def record(self, source: str, seconds: float = 0.0) -> None:
@@ -75,6 +96,14 @@ class PlanTelemetry:
             self.build_seconds[source] += float(seconds)
             self.events.append(source)
 
+    def record_tick(self, kind: str, n: int = 1) -> None:
+        """Bump a serving-loop counter (a ``TICK_KINDS`` name) by ``n``."""
+        if kind not in TICK_KINDS:
+            raise ValueError(
+                f"unknown tick kind {kind!r}; expected one of {TICK_KINDS}")
+        with self._lock:
+            self.ticks[kind] += int(n)
+
     @property
     def total(self) -> int:
         return sum(self.sources.values())
@@ -85,14 +114,27 @@ class PlanTelemetry:
             return {
                 "sources": dict(self.sources),
                 "build_seconds": dict(self.build_seconds),
+                "ticks": dict(self.ticks),
                 "total": sum(self.sources.values()),
             }
 
     def since(self, snap: dict) -> dict:
-        """Per-source deltas between ``snap`` (a ``snapshot()``) and now."""
+        """Per-source (and per-tick-kind) deltas between ``snap`` (a
+        ``snapshot()``) and now.  Pre-tick snapshots are accepted — missing
+        keys count from 0."""
         cur = self.snapshot()
-        return {s: cur["sources"][s] - snap["sources"].get(s, 0)
-                for s in PLAN_SOURCES}
+        out = {s: cur["sources"][s] - snap["sources"].get(s, 0)
+               for s in PLAN_SOURCES}
+        prev_ticks = snap.get("ticks", {})
+        out.update({k: cur["ticks"][k] - prev_ticks.get(k, 0)
+                    for k in TICK_KINDS})
+        return out
+
+    def decode_host_free(self, snap: dict) -> bool:
+        """The serving acceptance criterion: since ``snap``, at least one
+        decode tick ran and NO plan came from the host O(nnz) build."""
+        delta = self.since(snap)
+        return delta["decode_steps"] > 0 and delta["host-build"] == 0
 
     def host_free(self, warmup: int = 0) -> bool:
         """True when every record after the first ``warmup`` events came
@@ -110,6 +152,11 @@ stats = PlanTelemetry()
 def record(source: str, seconds: float = 0.0) -> None:
     """Record one plan acquisition on the active telemetry object."""
     stats.record(source, seconds)
+
+
+def record_tick(kind: str, n: int = 1) -> None:
+    """Bump a serving-loop tick counter on the active telemetry object."""
+    stats.record_tick(kind, n)
 
 
 @contextlib.contextmanager

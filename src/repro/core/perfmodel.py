@@ -31,6 +31,7 @@ __all__ = [
     "PUT_STRATEGY_PREDICTORS", "predict_schedule", "window_setup_time",
     "scan_loop_cost", "predict_scan_schedule",
     "PLAN_SOURCES", "plan_build_time", "replan_break_even_steps",
+    "decode_floor", "predict_decode_exchange", "predict_decode_step",
     "predict_heat2d", "Heat2DWorkload", "full_assembly_tax",
     "heat2d_edge_ring_comp", "predict_heat2d_window",
     "predict_heat2d_scan",
@@ -699,6 +700,122 @@ def _threads_of_node(topo: Topology, node: int) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
+# Decode regime — tiny-m latency floors (eqs. 12δ–15δ, docs/perf_model.md).
+# Every model above is a throughput model: the β (volume / bandwidth) terms
+# dominate because a training or prefill exchange moves thousands of
+# elements per shard.  Token-by-token decode inverts that: one routed
+# token per slot per step, so the per-message α (latency) terms dominate
+# and the volume terms of eqs. 12–15 price a transfer that is smaller than
+# one cacheline.  The floor keeps the §5 structure — exactly counted
+# per-thread volumes, per-node maxima — but charges what a tiny message
+# actually costs:
+#
+#   * every touched element moves a full cacheline plus its index entry
+#     through private memory (no streaming amortization at m ~ p):
+#     T_touchδ = (s_out + s_in) · (cacheline + idx) / w_private;
+#   * every message pays a full τ regardless of payload, plus one τ per
+#     thread for the step's issue/poll (paid even by threads with nothing
+#     to send — the bulk-synchronous window still crosses them):
+#     T_wireδ = Σ_threads-of-node (msgs_i + 1) · τ;
+#   * message counts per rung: replicate broadcasts to every other node,
+#     blockwise sends one message per needed remote block, condensed /
+#     overlap send the consolidated c_remote_out messages;
+#   * plus the per-window setup the schedule models already price.
+#
+# A rung's decode prediction is max(β model, α floor) — the floor can only
+# raise a prediction, so throughput-regime rankings are untouched.
+# --------------------------------------------------------------------------
+
+
+def decode_floor(w: SpmvWorkload, hw: HardwareParams, *,
+                 strategy: str = "condensed", direction: str = "get") -> float:
+    """α/latency floor of one decode-step exchange (tiny-m eqs. 12δ–15δ).
+
+    ``w.counts`` must already match ``direction`` (a put workload is built
+    from the transposed ``ScatterPlan`` counts, as everywhere else); the
+    touch term is send/recv symmetric so only the message counts differ.
+    """
+    c = w.counts
+    if strategy == "replicate":
+        msgs = np.full(w.p, float(max(0, w.topology.num_nodes - 1)))
+    elif strategy == "blockwise":
+        msgs = np.asarray(c.b_remote, float)
+    elif strategy in ("condensed", "overlap"):
+        msgs = np.asarray(c.c_remote_out, float)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    touched = np.asarray(c.s_local_out + c.s_remote_out
+                         + c.s_local_in + c.s_remote_in, float)
+    touch = touched * (hw.cacheline + hw.idx) / hw.w_private
+    worst = 0.0
+    for node in range(w.topology.num_nodes):
+        th = _threads_of_node(w.topology, node)
+        wire = float(((msgs[th] + 1.0) * hw.tau).sum())
+        worst = max(worst, float(touch[th].max()) + wire)
+    return float(worst + window_setup_time(w.topology, hw))
+
+
+def predict_decode_exchange(w: SpmvWorkload, hw: HardwareParams, *,
+                            strategy: str = "condensed",
+                            direction: str = "get") -> float:
+    """Decode-step price of one exchange: max(β throughput model, α floor).
+
+    The throughput predictors under-charge a tiny transfer (their latency
+    terms assume messages big enough to amortize); the floor under-charges
+    a bulk one (it ignores bandwidth).  The max is the crossover-correct
+    composite — it degrades to the plain §5 prediction exactly when the
+    volume terms dominate, so it is safe to apply at every batch size.
+    """
+    predictors = (PUT_STRATEGY_PREDICTORS if direction == "put"
+                  else STRATEGY_PREDICTORS)
+    base = float(predictors[strategy](w, hw))
+    return float(max(base, decode_floor(w, hw, strategy=strategy,
+                                        direction=direction)))
+
+
+def predict_decode_step(stages, hw: HardwareParams) -> dict:
+    """Eq. 23 composed over decode-priced stages: one serving decode tick.
+
+    Same stage spec as ``predict_schedule`` (``(name, direction, workload,
+    strategy-or-None)``); each stage is priced by
+    ``predict_decode_exchange`` and the fused window consolidates the K-1
+    redundant setups exactly as in the throughput model.  The extra
+    ``latency_bound`` entry names the stages whose α floor exceeded their
+    β model — at decode batch sizes {1..32} that should be all of them;
+    if it ever comes back empty the workload left the decode regime and
+    the plain ``predict_schedule`` applies.
+    """
+    per = []
+    latency_bound = []
+    topo = None
+    for name, direction, w, strategy in stages:
+        if direction not in ("get", "put"):
+            raise ValueError(f"direction must be 'get' or 'put': {direction}")
+        predictors = (PUT_STRATEGY_PREDICTORS if direction == "put"
+                      else STRATEGY_PREDICTORS)
+        if strategy is None:
+            strategy, t = min(
+                ((s, predict_decode_exchange(w, hw, strategy=s,
+                                             direction=direction))
+                 for s in predictors),
+                key=lambda kv: kv[1])
+        else:
+            t = predict_decode_exchange(w, hw, strategy=strategy,
+                                        direction=direction)
+        if t > float(predictors[strategy](w, hw)):
+            latency_bound.append(name)
+        per.append((name, direction, strategy, float(t)))
+        topo = topo if topo is not None else w.topology
+    assert per, "predict_decode_step needs at least one exchange stage"
+    times = [t for (_, _, _, t) in per]
+    saved = (len(per) - 1) * window_setup_time(topo, hw)
+    total = max(sum(times) - saved, max(times))
+    return {"total": float(total), "sum_standalone": float(sum(times)),
+            "setup_saved": float(saved), "stages": per,
+            "latency_bound": tuple(latency_bound)}
+
+
+# --------------------------------------------------------------------------
 # §8 — 2D heat equation on a uniform mesh, eqs. (19)–(22)
 # --------------------------------------------------------------------------
 
@@ -937,6 +1054,10 @@ ERROR_BUDGET_WORKLOADS = {
     # dispatch overhead on CPU hosts that the kernel terms (priced for a
     # real accelerator) deliberately do not carry
     "spmv_kernel": 1.5,
+    # decode-step exchanges (predict_decode_exchange): per-step volumes are
+    # a handful of cachelines, so the measured time is almost entirely the
+    # host's fixed dispatch floor — the widest envelope in the matrix
+    "moe_decode": 3.0,
 }
 
 # per-dtype multiplier: sub-f32 arithmetic is emulated on CPU hosts, so

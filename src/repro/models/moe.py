@@ -638,7 +638,7 @@ class DynamicMoELayer:
                  capacity: int, mesh, *, axis_name: str = "data",
                  act: str = "gelu", strategy: str = "auto", blocksize=None,
                  shards_per_node=None, hw=None, use_plan_cache: bool = True,
-                 s_max: int | None = None):
+                 s_max: int | None = None, decode: bool = False):
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro import compat
         from repro.comm import dynamic as dyn
@@ -679,12 +679,15 @@ class DynamicMoELayer:
         gather = IrregularGather(
             self.pattern, mesh, axis_name=axis_name, strategy=strategy,
             blocksize=blocksize, topology=topo, hw=hw,
-            use_plan_cache=use_plan_cache, plan_cost=self.plan_time)
+            use_plan_cache=use_plan_cache, plan_cost=self.plan_time,
+            decode=decode)
         scatter = IrregularScatter(
             self.pattern, mesh, axis_name=axis_name, strategy=strategy,
             reduce="add", blocksize=blocksize, topology=topo, hw=hw,
-            use_plan_cache=use_plan_cache, plan_cost=self.plan_time)
+            use_plan_cache=use_plan_cache, plan_cost=self.plan_time,
+            decode=decode)
         self.gather, self.scatter = gather, scatter
+        self.decode = decode
         self.strategies = {"dispatch": gather.strategy,
                            "combine": scatter.strategy}
         self.predicted_times = {"dispatch": gather.predicted_times,
@@ -750,8 +753,7 @@ class DynamicMoELayer:
             out_specs=P(axis_name), check_vma=False)
         weights_dev = self._weights
 
-        @jax.jit
-        def fwd(x, top_e_d, top_w_d):
+        def routed_step(x, top_e_d, top_w_d, wx):
             cols, w_slot = pack(top_e_d, top_w_d)
             cols2 = cols.reshape(-1, 1)
             # ONE derivation pass serves both directions (the transpose
@@ -759,12 +761,39 @@ class DynamicMoELayer:
             g = dyn.derive_gather_tables(cols2, n, p, s_max_r)
             gargs = (g.send_local_idx, g.recv_global_idx)
             sargs = scatter.derive_plan_args(cols2, gather_tables=g)
-            return mapped(x, *gargs, *sargs, cols, w_slot, *weights_dev)
+            return mapped(x, *gargs, *sargs, cols, w_slot, *wx)
+
+        self._routed_step = routed_step
+
+        @jax.jit
+        def fwd(x, top_e_d, top_w_d):
+            return routed_step(x, top_e_d, top_w_d, weights_dev)
 
         self._fwd = fwd
 
     def shard_tokens(self, x) -> jax.Array:
         return self.gather.shard_vector(x)
+
+    def apply(self, x: jax.Array, top_e, top_w, *weights) -> jax.Array:
+        """One routed step with the expert weights passed PER CALL (traced)
+        instead of baked at construction — the embeddable twin of
+        ``__call__`` for consumers that already sit inside a jit, e.g. the
+        transformer decode step scanning over its layer stack: one layer
+        instance (template shapes) serves every scanned layer, each
+        supplying its own traced ``w1, w2[, w3]`` slices.
+
+        Same shard_map window, same in-jit derivation, same math as
+        ``__call__``.  No telemetry is recorded here (this runs under the
+        caller's trace); the caller records one ``"device-derive"`` per
+        *executed* step host-side — ``repro.serve.engine`` does this per
+        decode tick."""
+        if len(weights) != len(self._weights):
+            raise ValueError(
+                f"expected {len(self._weights)} expert weight arrays "
+                f"(w1, w2{', w3' if len(self._weights) == 3 else ''}), "
+                f"got {len(weights)}")
+        return self._routed_step(x, jnp.asarray(top_e), jnp.asarray(top_w),
+                                 tuple(weights))
 
     def __call__(self, x: jax.Array, top_e, top_w) -> jax.Array:
         """One routed step: x (num_tokens, d) sharded + THIS batch's

@@ -45,6 +45,12 @@ class RunCtx:
     # the scan: FSDP all-gathers then move bf16 instead of f32 master params
     # (2x weight-collective cut; see EXPERIMENTS.md §Perf)
     ssm_scan_dtype: Any = jnp.float32  # bf16 halves SSM recurrence traffic
+    # Serving hook: when set, the MoE FFN of a SINGLE-TOKEN decode step is
+    # routed through fn(moe_params, h) -> out (both (B, 1, D)) instead of
+    # the in-jit moe_fwd dispatch — repro.serve wires the per-batch-routed
+    # DynamicMoELayer comm schedule in here (docs/serving.md).  Prefill and
+    # training (s_len > 1) keep the moe_fwd path.
+    moe_step: Callable[[Any, jax.Array], jax.Array] | None = None
 
     def c(self, x, tag):
         return self.constrain(x, tag) if self.constrain is not None else x
@@ -125,11 +131,16 @@ def _ffn_fwd(p, x, cfg, ctx, *, kind):
     h = L.norm_apply(p["ln2"], x, kind=cfg.norm)
     if kind == "moe":
         b, s_len, d = h.shape
-        g = min(ctx.moe_groups, b)
-        hg = h.reshape(g, (b // g) * s_len, d)
-        aux: dict = {}
-        out = M.moe_fwd(p["moe"], hg, cfg, constrain=ctx.constrain, aux=aux)
-        out = out.reshape(b, s_len, d)
+        if ctx.moe_step is not None and s_len == 1:
+            # serving decode: the comm-scheduled per-step MoE exchange
+            out = ctx.moe_step(p["moe"], h)
+        else:
+            g = min(ctx.moe_groups, b)
+            hg = h.reshape(g, (b // g) * s_len, d)
+            aux: dict = {}
+            out = M.moe_fwd(p["moe"], hg, cfg, constrain=ctx.constrain,
+                            aux=aux)
+            out = out.reshape(b, s_len, d)
         if cfg.dense_residual:
             out = out + L.mlp_fwd(p["res_mlp"], h, act=cfg.act)
         return out
@@ -152,14 +163,18 @@ def _block_fwd(p, x, cfg, ctx, *, kind, kv_ctx=None):
 # decode-path blocks (single token, cache)
 # ---------------------------------------------------------------------------
 
-def _init_layer_cache(cfg, batch, cache_len, dtype, *, kind, cross_len=0):
+def _init_layer_cache(cfg, batch, cache_len, dtype, *, kind, cross_len=0,
+                      per_slot=False):
     c: dict[str, Any] = {}
     if kind in ("dense", "moe", "hybrid", "encdec_dec", "cross"):
         hkv, hd = cfg.num_kv_heads, cfg.head_dim
         if kind != "cross":
             c["k"] = jnp.zeros((batch, cache_len, hkv, hd), dtype)
             c["v"] = jnp.zeros((batch, cache_len, hkv, hd), dtype)
-            c["slot_pos"] = jnp.full((cache_len,), -1, jnp.int32)
+            # per_slot: each batch lane advances independently (continuous
+            # batching), so positions are tracked per lane too
+            spos_shape = (batch, cache_len) if per_slot else (cache_len,)
+            c["slot_pos"] = jnp.full(spos_shape, -1, jnp.int32)
         if kind in ("encdec_dec", "cross"):
             c["cross_k"] = jnp.zeros((batch, cross_len, hkv, hd), dtype)
             c["cross_v"] = jnp.zeros((batch, cross_len, hkv, hd), dtype)
@@ -169,7 +184,13 @@ def _init_layer_cache(cfg, batch, cache_len, dtype, *, kind, cross_len=0):
 
 
 def _attn_decode(p, x, cfg, cache, pos, *, window=0):
-    """x: (B, 1, D); ring-buffer KV cache with per-slot positions."""
+    """x: (B, 1, D); ring-buffer KV cache with per-slot positions.
+
+    ``pos`` scalar: every batch lane sits at the same position (the batch
+    demo / the oracle scan) and ``slot_pos`` is shared ``(cache_len,)``.
+    ``pos`` (B,): continuous-batching lanes at independent positions with
+    per-lane ``slot_pos`` ``(B, cache_len)`` (``init_cache(per_slot=True)``).
+    """
     b = x.shape[0]
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     cache_len = cache["k"].shape[1]
@@ -181,27 +202,104 @@ def _attn_decode(p, x, cfg, cache, pos, *, window=0):
     k = L.rope(k, positions, theta=cfg.rope_theta)
 
     slot = pos % cache_len  # ring slot (== pos when cache_len >= seq)
-    ck = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-    spos = jax.lax.dynamic_update_slice(
-        cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
-
-    valid = (spos >= 0) & (spos <= pos)
-    if window:
-        valid &= spos > pos - window
+    if jnp.ndim(pos) == 0:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        spos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+        valid = (spos >= 0) & (spos <= pos)
+        if window:
+            valid &= spos > pos - window
+        valid = valid[None, None, None, :]
+    else:
+        lane = jnp.arange(b)
+        ck = cache["k"].at[lane, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[lane, slot].set(v[:, 0].astype(cache["v"].dtype))
+        spos = cache["slot_pos"].at[lane, slot].set(pos.astype(jnp.int32))
+        valid = (spos >= 0) & (spos <= pos[:, None])       # (B, cache_len)
+        if window:
+            valid &= spos > (pos - window)[:, None]
+        valid = valid[:, None, None, :]
     d = hd
     g = h // hkv
     qg = q.reshape(b, hkv, g, d)
     logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
                         ck.astype(jnp.float32)) * (d ** -0.5)
-    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    logits = jnp.where(valid, logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", w, cv.astype(jnp.float32))
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
     y = L.linear(p["wo"], out)
     return y, {"k": ck, "v": cv, "slot_pos": spos}
+
+
+def _attn_prefill(p, x, cfg, cache, pos, *, window=0):
+    """x: (B, S, D) prompt chunk; writes positions [pos, pos+S) into the
+    ring cache and attends causally over everything valid — the fused
+    counterpart of S successive ``_attn_decode`` calls (same f32 einsum,
+    same -1e30 masking, same softmax length over the full cache), so the
+    two paths agree bit-for-bit as long as the chunk fits the ring
+    (S <= cache_len: no slot is written twice within one call).
+
+    ``pos`` scalar for a shared-position cache, (B,) for a per-slot cache
+    (each lane prefills from its own start — the continuous-batching
+    insert path).
+    """
+    b, s_len = x.shape[:2]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cache_len = cache["k"].shape[1]
+    q = L.linear(p["wq"], x).reshape(b, s_len, h, hd)
+    k = L.linear(p["wk"], x).reshape(b, s_len, hkv, hd)
+    v = L.linear(p["wv"], x).reshape(b, s_len, hkv, hd)
+    offs = jnp.arange(s_len)
+    per_slot = jnp.ndim(pos) == 1
+    qpos = pos[:, None] + offs[None] if per_slot else pos + offs
+    positions = qpos if per_slot else qpos[None]       # (B, S) | (1, S)
+    q = L.rope(q, positions, theta=cfg.rope_theta)
+    k = L.rope(k, positions, theta=cfg.rope_theta)
+
+    slots = qpos % cache_len
+    if per_slot:
+        lane = jnp.arange(b)[:, None]
+        ck = cache["k"].at[lane, slots].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[lane, slots].set(v.astype(cache["v"].dtype))
+        spos = cache["slot_pos"].at[lane, slots].set(qpos.astype(jnp.int32))
+        sp = spos                                      # (B, cache_len)
+    else:
+        ck = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+        spos = cache["slot_pos"].at[slots].set(qpos.astype(jnp.int32))
+        sp = spos[None]                                # (1, cache_len)
+    qp = qpos if per_slot else qpos[None]              # (B, S) | (1, S)
+    valid = (sp[:, None, :] >= 0) & (sp[:, None, :] <= qp[..., None])
+    if window:
+        valid &= sp[:, None, :] > qp[..., None] - window
+    g = h // hkv
+    qg = q.reshape(b, s_len, hkv, g, hd)
+    logits = jnp.einsum("bshgd,blhd->bhgsl", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * (hd ** -0.5)
+    logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgsl,blhd->bshgd", w, cv.astype(jnp.float32))
+    out = out.reshape(b, s_len, h * hd).astype(x.dtype)
+    y = L.linear(p["wo"], out)
+    return y, {"k": ck, "v": cv, "slot_pos": spos}
+
+
+def _block_prefill(p, x, cfg, ctx, cache, pos, *, kind):
+    """Prefill twin of ``_block_decode`` for attention stacks: identical
+    residual/norm/FFN math (no training-path sharding constraints), S
+    positions at once."""
+    h = L.norm_apply(p["ln1"], x, kind=cfg.norm)
+    a, kvc = _attn_prefill(p["attn"], h, cfg, cache, pos,
+                           window=cfg.swa_window)
+    new_cache = dict(cache)
+    new_cache.update(kvc)
+    x = x + a
+    x = x + _ffn_fwd(p, x, cfg, ctx, kind=kind)
+    return x, new_cache
 
 
 def _cross_decode(p, x, cfg, cache):
@@ -468,14 +566,25 @@ class Model:
         return L.norm_apply(enc_p["norm"], x, kind=cfg.norm)
 
     # ---- serving ----
-    def init_cache(self, batch, cache_len, *, cross_len=0, dtype=jnp.bfloat16):
+    def init_cache(self, batch, cache_len, *, cross_len=0, dtype=jnp.bfloat16,
+                   per_slot=False):
+        """``per_slot=True`` builds a continuous-batching cache: ``pos``
+        becomes (B,) and ``slot_pos`` (B, cache_len), so every batch lane
+        (a serving *slot*) tracks its own sequence independently —
+        ``decode_step`` / ``prefill`` dispatch on the pos rank.  Needs an
+        attention-only stack (SSM recurrences carry no per-lane position)."""
         cfg = self.cfg
         if cfg.swa_window:
             cache_len = min(cache_len, cfg.swa_window)
+        if per_slot and self.kind not in ("dense", "moe"):
+            raise NotImplementedError(
+                "per-slot caches (continuous batching) need an "
+                f"attention-only stack, got family {cfg.family!r}")
 
         def one(_):
             return _init_layer_cache(cfg, batch, cache_len, dtype,
-                                     kind=self.kind, cross_len=cross_len)
+                                     kind=self.kind, cross_len=cross_len,
+                                     per_slot=per_slot)
 
         if cfg.is_vlm and cfg.cross_attn_period:
             per = cfg.cross_attn_period
@@ -490,7 +599,9 @@ class Model:
             }
         else:
             layers = jax.vmap(one)(jnp.arange(cfg.num_layers))
-        return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+        pos0 = (jnp.zeros((batch,), jnp.int32) if per_slot
+                else jnp.zeros((), jnp.int32))
+        return {"pos": pos0, "layers": layers}
 
     def decode_step(self, params, cache, tokens):
         """tokens: (B, 1). Returns (logits (B, 1, V), new_cache)."""
@@ -530,6 +641,44 @@ class Model:
                 else params["lm_head"]["w"])
         logits = ctx.c(x @ head.astype(x.dtype), "logits")
         return logits, {"pos": pos + 1, "layers": new_layers}
+
+    def prefill(self, params, cache, tokens):
+        """Fused prompt prefill: one forward over ``tokens`` (B, S) that
+        ALSO writes the prompt's K/V into the decode cache at positions
+        [pos, pos+S) — the production path ``runtime.steps.build_prefill
+        (fill_cache=True)`` wraps, replacing the sequential decode_step
+        scan (kept as the oracle in ``launch.serve.prefill_into_cache``).
+
+        Returns ``(last_logits (B, 1, V), new_cache)``; chunked prefill is
+        consecutive calls, each advancing ``cache["pos"]`` by its chunk
+        length.  Works on shared-position and per-slot caches; needs an
+        attention-only stack (dense/moe) — other families prefill through
+        the decode_step scan.  ``S <= cache_len`` (one ring lap per call).
+        """
+        cfg, ctx = self.cfg, self.ctx
+        if self.kind not in ("dense", "moe"):
+            raise NotImplementedError(
+                "fused prefill supports attention-only stacks (dense/moe); "
+                f"family {cfg.family!r} prefills via the decode_step scan")
+        cache_len = cache["layers"]["k"].shape[2]
+        if tokens.shape[1] > cache_len:
+            raise ValueError(
+                f"prefill chunk ({tokens.shape[1]} tokens) exceeds the ring "
+                f"cache ({cache_len} slots); chunk the prompt")
+        x = ctx.c(_embed_fwd(params["embed"], tokens, cfg, ctx), "act")
+        pos = cache["pos"]
+
+        def body(x, args):
+            lp, lc = args
+            y, nc = _block_prefill(lp, x, cfg, ctx, lc, pos, kind=self.kind)
+            return y, nc
+
+        x, new_layers = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"]))
+        x = L.norm_apply(params["final_norm"], x, kind=cfg.norm)
+        x = x[:, -1:, :]
+        logits = ctx.c(x @ self.head_weight(params).astype(x.dtype), "logits")
+        return logits, {"pos": pos + tokens.shape[1], "layers": new_layers}
 
     def prefill_cross(self, params, cache, context):
         """Fill cross-attention KV from encoder output / image embeds."""

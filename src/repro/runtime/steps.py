@@ -87,11 +87,24 @@ def build_decode_step(model: Model):
     return step
 
 
-def build_prefill(model: Model):
+def build_prefill(model: Model, *, fill_cache: bool = False):
     """Inference prefill: forward over the prompt; the head matmul runs on
     the last position only (next-token logits), as real serving does.
-    (Cache filling for subsequent decode is covered by decode_step lowering;
-    the prefill cell measures the prompt-processing compute/comm.)"""
+
+    Default (``fill_cache=False``): the benchmark-cell forward — measures
+    the prompt-processing compute/comm, discards the KV.
+
+    ``fill_cache=True``: the serving prefill — returns
+    ``step(params, cache, tokens) -> (last_logits, new_cache)``, the fused
+    ``Model.prefill`` that also writes the prompt's K/V into the decode
+    cache (chunked prefill = consecutive calls).  This is the production
+    replacement for the sequential decode_step scan
+    (``launch.serve.prefill_into_cache``, kept as the test oracle)."""
+    if fill_cache:
+        def fill_step(params, cache, tokens):
+            return model.prefill(params, cache, tokens)
+
+        return fill_step
 
     def step(params, tokens, extra=None):
         return model.forward(params, tokens, extra=extra, last_only=True)

@@ -1,0 +1,18 @@
+"""Continuous-batching inference server (docs/serving.md).
+
+The serving loop is the decode-regime consumer of ``repro.comm``: a
+request queue with arrival-time admission (``queue``), slot-based KV-cache
+bookkeeping (``slots``), and the prefill/decode interleave engine
+(``engine``) that packs ready prompts into free cache lanes, runs chunked
+fused prefill (``Model.prefill``) and steps every active lane through one
+jitted decode step per tick — with the MoE block optionally routed through
+the per-batch ``models.moe.DynamicMoELayer`` comm schedule (§5-priced,
+zero host plan builds after warmup, telemetry-asserted).
+"""
+from repro.serve.engine import (ServeEngine, ServeReport, generate_batch_loop,
+                                moe_decode_hook)
+from repro.serve.queue import Request, RequestQueue
+from repro.serve.slots import Slot, SlotManager
+
+__all__ = ["Request", "RequestQueue", "Slot", "SlotManager", "ServeEngine",
+           "ServeReport", "generate_batch_loop", "moe_decode_hook"]

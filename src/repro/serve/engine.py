@@ -1,0 +1,348 @@
+"""Prefill/decode interleave engine (continuous batching).
+
+The MaxText offline-inference shape: ``num_slots`` lanes of one batched
+per-slot KV cache.  Every tick the engine
+
+1. **admits** — pops arrived requests off the ``RequestQueue`` while free
+   lanes exist: each prompt runs chunked fused prefill (``Model.prefill``)
+   into a private 1-lane cache, which one jitted insert copies into the
+   free lane (slot index and first token are traced, so admission never
+   recompiles);
+2. **decodes** — one jitted ``Model.decode_step`` over ALL lanes (free
+   lanes compute garbage that is simply never read);
+3. **bookkeeps** — appends each active lane's greedy token host-side,
+   releases lanes whose request hit ``max_new_tokens`` / ``eos_id`` so the
+   next tick's admission can refill them.
+
+With ``moe_layer`` set (a ``models.moe.DynamicMoELayer`` built for
+``num_tokens == num_slots``), the transformer's MoE FFN is routed through
+the §5-priced comm schedule via ``RunCtx.moe_step``: per-tick routing,
+in-jit plan derivation, zero host plan builds after the first-tick trace —
+asserted through ``comm.telemetry`` (``decode_host_free``).
+
+The engine's clock is the tick counter, so ``Request.arrival_time`` in
+tick units makes admission order fully deterministic for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import telemetry
+from repro.models.transformer import Model
+from repro.serve.queue import Request, RequestQueue
+from repro.serve.slots import SlotManager
+
+__all__ = ["ServeEngine", "ServeReport", "generate_batch_loop",
+           "moe_decode_hook"]
+
+
+def moe_decode_hook(cfg, layer):
+    """``RunCtx.moe_step`` adapter: route one decode tick's (B, 1, D)
+    hidden batch through a ``DynamicMoELayer``.
+
+    The routing math is ``moe_fwd``'s verbatim (same einsum, f32 softmax,
+    ``lax.top_k``, renormalize); the dispatch→expert→combine then runs in
+    the layer's fused shard_map window with THIS layer's traced weights —
+    one ``DynamicMoELayer`` instance (template shapes) serves every
+    scanned transformer layer via ``DynamicMoELayer.apply``.
+    """
+    k = cfg.experts_per_token
+
+    def moe_step(p_moe, h):
+        b, _, d = h.shape
+        xg = h.reshape(1, b, d)
+        logits = jnp.einsum(
+            "gtd,de->gte", xg, p_moe["router"]["w"].astype(h.dtype)
+        ).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)
+        top_p = top_p / top_p.sum(-1, keepdims=True)
+        wx = [p_moe["w1"], p_moe["w2"]]
+        if cfg.act == "swiglu":
+            wx.append(p_moe["w3"])
+        y = layer.apply(h.reshape(b, d), top_e[0], top_p[0], *wx)
+        return y.reshape(b, 1, d).astype(h.dtype)
+
+    return moe_step
+
+
+def _with_moe_hook(model: Model, moe_layer) -> Model:
+    if moe_layer is None:
+        return model
+    if model.cfg.family != "moe":
+        raise ValueError(
+            f"moe_layer needs a MoE model, got family {model.cfg.family!r}")
+    ctx = dataclasses.replace(
+        model.ctx, moe_step=moe_decode_hook(model.cfg, moe_layer))
+    return Model(model.cfg, ctx)
+
+
+def _insert(cache, prefix, slot, token, tokens):
+    """Copy a B=1 per-slot prefix cache into lane ``slot`` of the batched
+    cache and seed the lane's next input token.  Layer arrays carry a
+    leading stacked-L dim, so every leaf maps as (L, 1, ...) -> lane of
+    (L, B, ...)."""
+
+    def put(dst, src):
+        return dst.at[:, slot].set(src[:, 0])
+
+    layers = jax.tree.map(put, cache["layers"], prefix["layers"])
+    pos = cache["pos"].at[slot].set(prefix["pos"][0])
+    toks = tokens.at[slot, 0].set(token)
+    return {"pos": pos, "layers": layers}, toks
+
+
+def _percentile(xs, q: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    i = min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1))))
+    return float(s[i])
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What a ``ServeEngine.run`` produced, with the latency accounting
+    ``benchmarks.tables.table_serve`` reports."""
+
+    outputs: dict[Any, list[int]]       # request id -> greedy tokens
+    completed: list[Any]                # completion order
+    slot_of: dict[Any, int]             # request id -> lane it ran in
+    ticks: int
+    tick_seconds: list[float]           # wall time of each decode tick
+    token_seconds: list[float]          # per generated token (its tick's dt)
+    ttft_seconds: dict[Any, float]      # request id -> prefill wall time
+    telemetry: dict                     # comm.telemetry deltas for the run
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(len(v) for v in self.outputs.values())
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Decode throughput: tokens emitted by decode ticks over decode
+        wall time (prefill tokens/time excluded on both sides)."""
+        t = sum(self.tick_seconds)
+        return len(self.token_seconds) / t if t > 0 else 0.0
+
+    def p50_us(self) -> float:
+        return _percentile(self.token_seconds, 50.0) * 1e6
+
+    def p99_us(self) -> float:
+        return _percentile(self.token_seconds, 99.0) * 1e6
+
+
+class ServeEngine:
+    """Continuous-batching serving loop over a per-slot decode cache."""
+
+    def __init__(self, model: Model, params, *, num_slots: int,
+                 cache_len: int, prefill_chunk: int | None = None,
+                 moe_layer=None, cache_dtype=None):
+        if moe_layer is not None and moe_layer.num_tokens != num_slots:
+            raise ValueError(
+                f"moe_layer routes {moe_layer.num_tokens} tokens per step "
+                f"but the engine decodes {num_slots} lanes; build the "
+                f"DynamicMoELayer with num_tokens={num_slots}")
+        self.model = _with_moe_hook(model, moe_layer)
+        self.params = params
+        self.prefill_chunk = prefill_chunk
+        self.cache_dtype = cache_dtype or self.model.ctx.act_dtype
+        # one traced derivation per MoE layer executes every decode tick
+        self._derives_per_tick = (
+            model.cfg.num_layers if moe_layer is not None else 0)
+
+        self.cache = self.model.init_cache(
+            num_slots, cache_len, per_slot=True, dtype=self.cache_dtype)
+        self.cache_len = int(self.cache["layers"]["k"].shape[2])
+        self.slots = SlotManager(num_slots)
+        self.queue = RequestQueue()
+        self._tokens = jnp.zeros((num_slots, 1), jnp.int32)
+
+        self._decode_fn = jax.jit(self.model.decode_step)
+        self._prefill_fn = jax.jit(self.model.prefill)
+        self._insert_fn = jax.jit(_insert)
+
+        self.now = 0.0            # tick clock (admission compares against it)
+        self.ticks = 0
+        self._outputs: dict[Any, list[int]] = {}
+        self._completed: list[Any] = []
+        self._slot_of: dict[Any, int] = {}
+        self._tick_seconds: list[float] = []
+        self._token_seconds: list[float] = []
+        self._ttft: dict[Any, float] = {}
+        self._snap0 = telemetry.stats.snapshot()
+
+    # ---- request intake ----
+    def submit(self, request: Request) -> None:
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        plen = len(np.asarray(request.prompt).reshape(-1))
+        if plen < 1 or plen > self.cache_len:
+            raise ValueError(
+                f"prompt length {plen} must be in [1, {self.cache_len}] "
+                "(the decode cache ring)")
+        self.queue.submit(request)
+
+    # ---- one tick ----
+    def step(self) -> int:
+        """Admit → decode → bookkeep.  Returns the number of lanes still
+        active after the tick."""
+        while self.slots.num_free and len(self.queue):
+            req = self.queue.pop_ready(self.now)
+            if req is None:
+                break
+            self._admit(req)
+
+        active = self.slots.active()
+        if active:
+            t0 = time.perf_counter()
+            logits, self.cache = self._decode_fn(
+                self.params, self.cache, self._tokens)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            self._tokens = nxt[:, None]
+            nxt_host = np.asarray(nxt)          # blocks: tick boundary
+            dt = time.perf_counter() - t0
+            telemetry.record_tick("decode_steps")
+            for _ in range(self._derives_per_tick):
+                telemetry.record("device-derive")
+            self._tick_seconds.append(dt)
+            for s in active:
+                self._token_seconds.append(dt)
+                self._emit(s, int(nxt_host[s.index]))
+
+        self.now += 1.0
+        self.ticks += 1
+        return len(self.slots.active())
+
+    def _admit(self, req: Request) -> None:
+        t0 = time.perf_counter()
+        prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
+        plen = prompt.shape[1]
+        prefix = self.model.init_cache(
+            1, self.cache_len, per_slot=True, dtype=self.cache_dtype)
+        chunk = self.prefill_chunk or plen
+        logits = None
+        for lo in range(0, plen, chunk):
+            piece = jnp.asarray(prompt[:, lo:lo + chunk])
+            logits, prefix = self._prefill_fn(self.params, prefix, piece)
+            telemetry.record_tick("prefill_chunks")
+        first = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+        slot = self.slots.allocate(req.id, max_new_tokens=req.max_new_tokens,
+                                   eos_id=req.eos_id)
+        self.cache, self._tokens = self._insert_fn(
+            self.cache, prefix, jnp.asarray(slot, jnp.int32), first,
+            self._tokens)
+        self._outputs[req.id] = []
+        self._slot_of[req.id] = slot
+        self._ttft[req.id] = time.perf_counter() - t0
+        # the prefill's last-position logits yield generated token #1
+        self._emit(self.slots[slot], int(first))
+
+    def _emit(self, s, tok: int) -> None:
+        rid = s.request_id
+        self._outputs[rid].append(tok)
+        s.generated += 1
+        if s.generated >= s.max_new_tokens or (
+                s.eos_id is not None and tok == s.eos_id):
+            self._completed.append(rid)
+            self.slots.release(s.index)
+
+    # ---- drive to completion ----
+    def run(self, *, max_ticks: int = 100_000) -> ServeReport:
+        """Tick until the queue drains and every lane completes."""
+        while len(self.queue) or self.slots.active():
+            if not self.slots.active():
+                nxt = self.queue.next_arrival()
+                if nxt is not None and nxt > self.now:
+                    self.now = float(nxt)       # idle: jump to next arrival
+            self.step()
+            if self.ticks >= max_ticks:
+                raise RuntimeError(f"serve loop exceeded {max_ticks} ticks")
+        return self.report()
+
+    def report(self) -> ServeReport:
+        return ServeReport(
+            outputs={k: list(v) for k, v in self._outputs.items()},
+            completed=list(self._completed),
+            slot_of=dict(self._slot_of),
+            ticks=self.ticks,
+            tick_seconds=list(self._tick_seconds),
+            token_seconds=list(self._token_seconds),
+            ttft_seconds=dict(self._ttft),
+            telemetry=telemetry.stats.since(self._snap0),
+        )
+
+    # ---- steady-state invariant ----
+    def snapshot(self) -> dict:
+        """Telemetry snapshot for a later ``assert_steady_state``."""
+        return telemetry.stats.snapshot()
+
+    def assert_steady_state(self, snap: dict) -> dict:
+        """Assert ZERO host plan builds happened across the decode ticks
+        since ``snap`` (the §5 T_plan tax must not recur once warm).
+        Returns the telemetry delta."""
+        delta = telemetry.stats.since(snap)
+        if not telemetry.stats.decode_host_free(snap):
+            raise AssertionError(
+                f"host plan builds during steady-state decode: {delta}")
+        return delta
+
+
+def generate_batch_loop(model: Model, params, requests, *, cache_len: int,
+                        prefill_chunk: int | None = None, moe_layer=None,
+                        cache_dtype=None) -> dict[Any, list[int]]:
+    """The naive batch-loop baseline the engine must match token-for-token.
+
+    Every request gets a dedicated lane up front (batch = len(requests):
+    no queue, no admission, no slot reuse), prompts prefill per-request
+    into their lanes through the same fused path, then one decode step per
+    tick until the longest request finishes — the pre-serve ``launch.serve``
+    demo loop.  Tokens stop accumulating per request at its
+    ``max_new_tokens`` / ``eos_id``, so outputs compare directly against
+    ``ServeReport.outputs``.
+    """
+    model = _with_moe_hook(model, moe_layer)
+    dtype = cache_dtype or model.ctx.act_dtype
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    insert = jax.jit(_insert)
+
+    b = len(requests)
+    cache = model.init_cache(b, cache_len, per_slot=True, dtype=dtype)
+    clen = int(cache["layers"]["k"].shape[2])
+    tokens = jnp.zeros((b, 1), jnp.int32)
+    outs: dict[Any, list[int]] = {}
+
+    for i, r in enumerate(requests):
+        prompt = np.asarray(r.prompt, np.int32).reshape(1, -1)
+        prefix = model.init_cache(1, clen, per_slot=True, dtype=dtype)
+        chunk = prefill_chunk or prompt.shape[1]
+        logits = None
+        for lo in range(0, prompt.shape[1], chunk):
+            piece = jnp.asarray(prompt[:, lo:lo + chunk])
+            logits, prefix = prefill(params, prefix, piece)
+        first = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+        cache, tokens = insert(cache, prefix, jnp.asarray(i, jnp.int32),
+                               first, tokens)
+        outs[r.id] = [int(first)]
+
+    def done(r):
+        o = outs[r.id]
+        return len(o) >= r.max_new_tokens or (
+            r.eos_id is not None and o and o[-1] == r.eos_id)
+
+    while not all(done(r) for r in requests):
+        logits, cache = decode(params, cache, tokens)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        tokens = nxt[:, None]
+        nh = np.asarray(nxt)
+        for i, r in enumerate(requests):
+            if not done(r):
+                outs[r.id].append(int(nh[i]))
+    return outs

@@ -170,6 +170,48 @@ def test_matrix_rejects_contradictory_verdict(tmp_path):
     assert any("contradicts" in e for e in check_file(_write(tmp_path, doc)))
 
 
+# -- serve rows schema --
+
+def _serve_doc():
+    return {"bench": "serve", "smoke": True, "rows": [
+        {"name": "table_serve.engine.decode", "us_per_call": 9000.0,
+         "derived": "tokens_per_s=900.0 p50_us=9000 p99_us=9300"},
+        {"name": "table_serve.engine.prefill", "us_per_call": 6000.0,
+         "derived": "ttft_p50_us=5800 requests=8 chunks=16"},
+        {"name": "table_serve.decode_step.b1", "us_per_call": 1800.0,
+         "derived": "predicted_us=4400.0 model_error=1.4 budget=360 "
+                    "within_budget=True"},
+    ]}
+
+
+def test_serve_valid(tmp_path):
+    assert check_file(_write(tmp_path, _serve_doc())) == []
+
+
+def test_serve_rejects_missing_engine_metrics(tmp_path):
+    doc = _serve_doc()
+    doc["rows"][0]["derived"] = "p50_us=9000 p99_us=9300"   # no throughput
+    assert any("tokens_per_s" in e for e in check_file(_write(tmp_path, doc)))
+    doc = _serve_doc()
+    doc["rows"][0]["derived"] = "tokens_per_s=900.0"        # no tail latency
+    assert any("p99_us" in e for e in check_file(_write(tmp_path, doc)))
+
+
+def test_serve_rejects_missing_decode_step_rows(tmp_path):
+    doc = _serve_doc()
+    doc["rows"] = doc["rows"][:2]
+    assert any("decode_step" in e for e in check_file(_write(tmp_path, doc)))
+
+
+@pytest.mark.parametrize("drop", ["predicted_us=", "model_error=",
+                                  "within_budget="])
+def test_serve_rejects_incomplete_decode_step_fields(tmp_path, drop):
+    doc = _serve_doc()
+    doc["rows"][2]["derived"] = doc["rows"][2]["derived"].replace(drop, "x_")
+    errs = check_file(_write(tmp_path, doc))
+    assert any(drop in e for e in errs)
+
+
 # -- CLI exit codes --
 
 def test_main_exit_codes(tmp_path, capsys):

@@ -101,6 +101,86 @@ def test_heat2d_volumes_and_prediction():
     np.testing.assert_allclose(pred["comp"], expect)
 
 
+def test_decode_exchange_is_max_of_model_and_floor():
+    """Eqs. 12δ–15δ: the decode price of a rung is max(β throughput model,
+    α/latency floor), and the floor never drops below the window setup."""
+    w = _workload(nodes=4)
+    hw = pm.ABEL
+    setup = pm.window_setup_time(w.topology, hw)
+    for strat, base_fn in pm.STRATEGY_PREDICTORS.items():
+        floor = pm.decode_floor(w, hw, strategy=strat, direction="get")
+        assert floor >= setup
+        t = pm.predict_decode_exchange(w, hw, strategy=strat,
+                                       direction="get")
+        np.testing.assert_allclose(t, max(float(base_fn(w, hw)), floor))
+
+
+def test_decode_floor_dominates_at_tiny_m():
+    """A serving-sized workload (few accessed elements) must be
+    latency-bound: the α floor exceeds the β model, which under-charges
+    transfers too small to amortize its bandwidth terms."""
+    tiny = _workload(shard=16, r_nz=1, nodes=4, bs=8)
+    hw = pm.ABEL
+    for strat in pm.STRATEGY_PREDICTORS:
+        floor = pm.decode_floor(tiny, hw, strategy=strat, direction="get")
+        assert (pm.predict_decode_exchange(tiny, hw, strategy=strat,
+                                           direction="get") == floor)
+
+
+def test_predict_decode_step_composition():
+    w = _workload(nodes=2)
+    hw = pm.ABEL
+    out = pm.predict_decode_step(
+        [("dispatch", "get", w, "condensed"),
+         ("combine", "put", w, "condensed")], hw)
+    times = [t for (_, _, _, t) in out["stages"]]
+    np.testing.assert_allclose(out["sum_standalone"], sum(times))
+    # the fused window consolidates exactly K-1 redundant setups (eq. 23)
+    np.testing.assert_allclose(out["setup_saved"],
+                               pm.window_setup_time(w.topology, hw))
+    assert max(times) <= out["total"] <= out["sum_standalone"]
+    # strategy=None resolves each stage to its argmin decode-priced rung
+    auto = pm.predict_decode_step([("dispatch", "get", w, None)], hw)
+    _, _, picked, t = auto["stages"][0]
+    best = min((pm.predict_decode_exchange(w, hw, strategy=s,
+                                           direction="get"), s)
+               for s in pm.STRATEGY_PREDICTORS)
+    np.testing.assert_allclose(t, best[0])
+    assert picked == best[1]
+
+
+def test_rank_strategies_decode_reprices():
+    """select.rank_strategies(decode=True) is what keeps strategy="auto"
+    honest for serving: every rung's time is re-priced through
+    predict_decode_exchange, which can only raise it."""
+    from repro.comm import select
+    n, p = 512, 8
+    m = make_mesh_like_matrix(n, 4, locality_window=n // 4, seed=0)
+    topo = Topology(p, 4)
+    plan = build_comm_plan(m.cols, n, p, blocksize=16, topology=topo)
+    hw = pm.ABEL
+    plain = dict(select.rank_strategies(plan, 4, hw, direction="get"))
+    dec = dict(select.rank_strategies(plan, 4, hw, direction="get",
+                                      decode=True))
+    w = select.workload_from_plan(plan, 4)
+    assert set(dec) == set(plain)
+    for s, t in dec.items():
+        assert t >= plain[s]
+        np.testing.assert_allclose(
+            t, pm.predict_decode_exchange(w, hw, strategy=s,
+                                          direction="get"))
+
+
+def test_error_budget_decode_workload():
+    """moe_decode carries a 3x budget over the base rung budget: the
+    decode regime's wall clocks sit in dispatch-overhead territory on
+    interpret-mode hosts."""
+    key = {"rung": "condensed", "dtype": "float32", "mesh": [8]}
+    base = pm.error_budget(dict(key, workload="spmv"))
+    dec = pm.error_budget(dict(key, workload="moe_decode"))
+    np.testing.assert_allclose(dec, 3.0 * base)
+
+
 def test_paper_table5_comp_prediction():
     """Reproduce the paper's Table 5 T_comp predictions with Abel params:
     20000x20000 mesh, 16 threads (4x4): paper predicts 122.07 s / 1000

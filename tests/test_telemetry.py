@@ -47,10 +47,26 @@ def test_snapshot_is_detached_and_since_is_flat(isolated_everything):
     telemetry.record("device-derive")
     telemetry.record("device-derive")
     telemetry.record("bucket-reuse")
+    telemetry.record_tick("decode_steps", 3)
     assert snap["sources"]["device-derive"] == 0      # detached
     delta = tel.since(snap)
     assert delta == {"memory-hit": 0, "disk-hit": 0, "bucket-reuse": 1,
-                     "device-derive": 2, "host-build": 0}
+                     "device-derive": 2, "host-build": 0,
+                     "decode_steps": 3, "prefill_chunks": 0}
+
+
+def test_decode_host_free_interval(isolated_everything):
+    """The serving steady-state predicate: decode ticks happened and no
+    host build landed inside the interval."""
+    tel = isolated_everything
+    telemetry.record("host-build", seconds=0.1)       # warmup build
+    snap = tel.snapshot()
+    assert not tel.decode_host_free(snap)             # no ticks yet
+    telemetry.record_tick("decode_steps")
+    telemetry.record("device-derive")
+    assert tel.decode_host_free(snap)                 # warm + host-free
+    telemetry.record("host-build")                    # steady-state bug
+    assert not tel.decode_host_free(snap)
 
 
 def test_host_free_warmup_boundary(isolated_everything):
